@@ -1,0 +1,215 @@
+"""Single-operator benchmarks: paper Tables 1/6/8/9 + Figs 9/10.
+
+Every row reports the MEASURED iteration/pass counts (the data-aware part of
+the claim) and two latencies: CPU wall (this container) and the modeled TPU
+number derived from the counts (see common.py). The paper's corresponding
+quantity is noted per table in EXPERIMENTS.md.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.gvr import gvr_topk, uniform_pre_idx
+from repro.core.rope import generate_indexer_scores, compute_static_pre_idx
+from repro.core.topk_baselines import exact_topk, radix_select_topk
+from .common import (emit, model_gvr_us, model_radix_us, model_sort_us,
+                     time_fn)
+
+K = 2048
+
+
+def _evolving_scores(rng, n, steps, rho=0.98, dist="normal"):
+    """Temporally-correlated score rows (decode-step simulator): score_t =
+    rho-correlated with score_{t-1} -> prev-step Top-K is a real signal."""
+    base = _draw(rng, dist, n)
+    rows = [base]
+    for _ in range(steps - 1):
+        nxt = rho * rows[-1] + np.sqrt(1 - rho ** 2) * _draw(rng, dist, n)
+        rows.append(nxt)
+    return np.stack(rows)
+
+
+def _draw(rng, dist, n):
+    if dist == "normal":
+        return rng.normal(size=n)
+    if dist == "lognormal":                       # paper L0
+        return rng.lognormal(0, 1.5, size=n)
+    if dist == "beta":                            # paper L21/L40/L41
+        return rng.beta(2, 5, size=n)
+    if dist == "weibull":                         # paper L22/L60
+        return rng.weibull(1.5, size=n)
+    if dist == "logistic":                        # paper L1
+        return rng.logistic(size=n)
+    raise ValueError(dist)
+
+
+def bench_table6_synthetic_latency():
+    """Table 6 / Fig 9: GVR vs radix vs lax.top_k over N, synthetic scores
+    with the STATIC RoPE prior as preIdx (no temporal signal)."""
+    rows = []
+    for n in [8192, 16384, 32768, 65536, 131072]:
+        scores, pre = generate_indexer_scores(jax.random.PRNGKey(0), n, K)
+        x = scores[None]
+        pre = pre[None]
+        g = jax.jit(lambda x, p: gvr_topk(x, p, K))
+        r = jax.jit(lambda x: radix_select_topk(x, K))
+        e = jax.jit(lambda x: exact_topk(x, K))
+        res = g(x, pre)
+        it = float(np.mean(np.asarray(res.stats.secant_iters)))
+        cand = float(np.mean(np.asarray(res.stats.cand_count)))
+        _, _, rst = r(x)
+        passes = float(np.mean(np.asarray(rst.passes)))
+        us_g = time_fn(g, x, pre)
+        us_r = time_fn(r, x)
+        us_e = time_fn(e, x)
+        mg, mr = model_gvr_us(n, K, it, cand), model_radix_us(n, passes)
+        rows.append((f"table6/gvr/n={n}", round(us_g, 1),
+                     f"I={it:.1f};tpu_us={mg:.1f}"))
+        rows.append((f"table6/radix/n={n}", round(us_r, 1),
+                     f"R={passes:.1f};tpu_us={mr:.1f}"))
+        rows.append((f"table6/laxtopk/n={n}", round(us_e, 1),
+                     f"tpu_us={model_sort_us(n):.1f}"))
+        rows.append((f"table6/speedup/n={n}", "",
+                     f"modeled={mr/mg:.2f}x;cpu={us_r/us_g:.2f}x"))
+    return rows
+
+
+def bench_table7_per_layer_speedup():
+    """Table 7 / Fig 10: per-'layer' speedup on temporally-correlated decode
+    scores; layer distributions follow the paper's Table 15 fits."""
+    layer_dists = {0: "lognormal", 1: "logistic", 20: "beta", 21: "beta",
+                   22: "weibull", 40: "beta", 41: "beta", 42: "beta",
+                   60: "weibull"}
+    # low-correlation early layers (paper Fig 3: L0/L1 alpha ~ 1-2%)
+    layer_rho = {0: 0.2, 1: 0.3}
+    rng = np.random.default_rng(0)
+    n, steps = 70656, 12
+    rows = []
+    speedups = []
+    for layer, dist in layer_dists.items():
+        rho = layer_rho.get(layer, 0.985)
+        s = _evolving_scores(rng, n, steps, rho=rho, dist=dist)
+        x = jnp.asarray(s, jnp.float32)
+        prev = jnp.asarray(np.argsort(-s[0])[:K][None].repeat(steps, 0), jnp.int32)
+        # prev-step feedback: run sequentially
+        its, cands, alphas = [], [], []
+        prev_row = jnp.asarray(np.argsort(-s[0])[:K], jnp.int32)
+        for t in range(1, steps):
+            res = gvr_topk(x[t][None], prev_row[None], K)
+            its.append(float(res.stats.secant_iters[0]))
+            cands.append(float(res.stats.cand_count[0]))
+            true_prev = set(np.asarray(prev_row).tolist())
+            now = set(np.asarray(res.indices[0]).tolist())
+            alphas.append(len(true_prev & now) / K)
+            prev_row = res.indices[0]
+        _, _, rst = radix_select_topk(x[1][None], K)
+        it, cand = np.mean(its), np.mean(cands)
+        mg = model_gvr_us(n, K, it, cand)
+        mr = model_radix_us(n, float(rst.passes[0]))
+        speedups.append(mr / mg)
+        rows.append((f"table7/L{layer}", "",
+                     f"alpha={np.mean(alphas):.2f};I={it:.2f};"
+                     f"speedup_model={mr/mg:.2f}x"))
+    rows.append(("table7/overall", "", f"avg_speedup={np.mean(speedups):.2f}x"))
+    return rows
+
+
+def bench_table8_distribution_sensitivity():
+    """Table 8: speedup vs score distribution at fixed prediction quality."""
+    rng = np.random.default_rng(1)
+    n = 70656
+    rows = []
+    for dist in ["beta", "weibull", "logistic", "lognormal", "normal"]:
+        s = _evolving_scores(rng, n, 3, rho=0.985, dist=dist)
+        x = jnp.asarray(s, jnp.float32)
+        prev = jnp.asarray(np.argsort(-s[0])[:K], jnp.int32)[None]
+        res = gvr_topk(x[1][None], prev, K)
+        it = float(res.stats.secant_iters[0])
+        cand = float(res.stats.cand_count[0])
+        _, _, rst = radix_select_topk(x[1][None], K)
+        mg, mr = model_gvr_us(n, K, it, cand), model_radix_us(n, float(rst.passes[0]))
+        rows.append((f"table8/{dist}", "",
+                     f"I={it:.0f};cand={cand:.0f};speedup_model={mr/mg:.2f}x"))
+    return rows
+
+
+def bench_table9_preidx_ablation():
+    """Table 9: prediction-signal-quality ablation.
+    (a) no preIdx -> radix fallback; (b) random idx; (c) prev-step high-corr;
+    (d) prev-step low-corr."""
+    rng = np.random.default_rng(2)
+    n = 70656
+    rows = []
+    _, _, rst = radix_select_topk(
+        jnp.asarray(rng.normal(size=(1, n)), jnp.float32), K)
+    base_us = model_radix_us(n, float(rst.passes[0]))
+    rows.append(("table9/a_no_preidx_radix", "", f"tpu_us={base_us:.1f};1.00x"))
+    for tag, rho in [("c_prev_high_corr", 0.985), ("d_prev_low_corr", 0.30)]:
+        s = _evolving_scores(rng, n, 3, rho=rho)
+        prev = jnp.asarray(np.argsort(-s[1])[:K], jnp.int32)[None]
+        x2 = jnp.asarray(s[2], jnp.float32)[None]
+        res = gvr_topk(x2, prev, K)
+        it = float(res.stats.secant_iters[0])
+        alpha = len(set(np.asarray(prev[0]).tolist())
+                    & set(np.asarray(res.indices[0]).tolist())) / K
+        mg = model_gvr_us(n, K, it, float(res.stats.cand_count[0]))
+        rows.append((f"table9/{tag}", "",
+                     f"alpha={alpha:.2f};I={it:.0f};tpu_us={mg:.1f};"
+                     f"{base_us/mg:.2f}x"))
+    x = jnp.asarray(rng.normal(size=(1, n)), jnp.float32)
+    prev_r = jnp.asarray(rng.choice(n, K, replace=False), jnp.int32)[None]
+    res = gvr_topk(x, prev_r, K)
+    mg = model_gvr_us(n, K, float(res.stats.secant_iters[0]),
+                      float(res.stats.cand_count[0]))
+    rows.append(("table9/b_random_idx", "",
+                 f"I={float(res.stats.secant_iters[0]):.0f};tpu_us={mg:.1f};"
+                 f"{base_us/mg:.2f}x"))
+    return rows
+
+
+def bench_table1_pass_counts():
+    """Table 1: global-pass accounting, measured."""
+    rng = np.random.default_rng(3)
+    n = 65536
+    s = _evolving_scores(rng, n, 3, rho=0.985)
+    prev = jnp.asarray(np.argsort(-s[1])[:K], jnp.int32)[None]
+    x = jnp.asarray(s[2], jnp.float32)[None]
+    res = gvr_topk(x, prev, K)
+    _, _, rst = radix_select_topk(x, K)
+    return [
+        ("table1/gvr_passes", "", f"I+1={float(res.stats.secant_iters[0])+1:.0f}"),
+        ("table1/radix_passes", "",
+         f"R={float(rst.passes[0]):.0f}(x2 scans each)"),
+        ("table1/sort_passes", "", f"~log2(N)={np.log2(n):.0f}"),
+    ]
+
+
+def bench_phase_breakdown():
+    """Table 10: per-phase cost model from measured counts (P3 constant,
+    P2 scales with I, P4 buffer-resident)."""
+    rng = np.random.default_rng(4)
+    n = 70656
+    rows = []
+    for tag, rho, dist in [("L0_low_corr", 0.2, "lognormal"),
+                           ("L21_high_corr", 0.985, "beta"),
+                           ("L60_high_corr", 0.985, "weibull")]:
+        s = _evolving_scores(rng, n, 3, rho=rho, dist=dist)
+        prev = jnp.asarray(np.argsort(-s[1])[:K], jnp.int32)[None]
+        x = jnp.asarray(s[2], jnp.float32)[None]
+        res = gvr_topk(x, prev, K)
+        it = float(res.stats.secant_iters[0])
+        snap = float(res.stats.snap_iters[0])
+        hist = float(res.stats.hist_levels[0])
+        from .common import HBM_BW, PASS_OVERHEAD_US
+        p1 = K * 4 * 2 / HBM_BW * 1e6 + PASS_OVERHEAD_US
+        p2 = it * (n * 4 / HBM_BW * 1e6 + PASS_OVERHEAD_US)
+        p3 = n * 4 / HBM_BW * 1e6 + PASS_OVERHEAD_US
+        p4 = (hist + snap) * 0.2          # VMEM-resident buffer passes
+        tot = p1 + p2 + p3 + p4
+        rows.append((f"table10/{tag}", "",
+                     f"P1={p1:.1f}us({p1/tot:.0%});P2={p2:.1f}us({p2/tot:.0%});"
+                     f"P3={p3:.1f}us({p3/tot:.0%});P4={p4:.1f}us({p4/tot:.0%})"))
+    return rows

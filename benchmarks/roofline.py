@@ -1,0 +1,166 @@
+"""§Roofline: three-term roofline per (arch × shape) from the dry-run JSONs.
+
+  compute    = FLOPs / (chips × 197 TF/s)
+  memory     = HBM bytes per device / 819 GB/s
+  collective = collective bytes per device / 50 GB/s link
+
+Methodology note (EXPERIMENTS.md §Roofline): XLA's compiled.cost_analysis()
+counts while-loop bodies ONCE (verified empirically — a 4-layer scan reports
+1 layer of FLOPs), so the compute/memory terms here are ANALYTIC from the
+architecture algebra below; the collective term comes from the partitioned
+HLO with explicit loop-trip correction (launch/dryrun.parse_collectives);
+HLO cost_analysis values are retained in the JSON as a body-once
+cross-check, and compiled.memory_analysis() supplies the capacity column.
+
+MODEL_FLOPS = 6·N_active·D (train) / 2·N_active per decoded token.
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+PEAK = 197e12
+HBM = 819e9
+ICI = 50e9
+
+SHAPES = {"train_4k": (256, 4096), "prefill_32k": (32, 32768),
+          "decode_32k": (128, 32768), "long_500k": (1, 524288)}
+
+
+def _cfg(arch):
+    from repro.configs.registry import get_config
+    return get_config(arch.replace("_", "-") if "-" not in arch else arch) \
+        if False else get_config(arch)
+
+
+def analytic_terms(arch: str, shape: str, n_devices: int) -> dict:
+    """FLOPs (global) and HBM bytes (per device) from architecture algebra."""
+    from repro.configs.registry import get_config
+    cfg = get_config(arch)
+    b, s = SHAPES[shape]
+    n_act = cfg.active_param_count()
+    n_tot = cfg.param_count()
+    model_ext = 16 if n_devices >= 256 else 1
+    data_ext = n_devices // model_ext
+    hd, h, kvh, l = cfg.hd, cfg.n_heads, cfg.n_kv_heads, cfg.n_layers
+    l_attn = (l // cfg.attn_every) if cfg.attn_every else \
+        (0 if cfg.family == "ssm" else l)
+    d_attn = h * hd
+
+    if shape == "train_4k":
+        tokens = b * s
+        fl = 6.0 * n_act * tokens                       # matmul fwd+bwd
+        fl += 3.5 * 2.0 * tokens * s * d_attn * 0.5 * l_attn  # causal attn
+        fl *= 4.0 / 3.0                                 # full remat recompute
+        # per-device HBM: params fwd+bwd+update, grads, adam moments,
+        # activations at remat boundaries
+        p_dev = n_tot * 2 / model_ext
+        act = tokens / data_ext * cfg.d_model * 2 * 6 * l / max(l, 1)
+        by = p_dev * 3 + n_tot * 4 / model_ext * 3 + \
+            n_tot * 8 / n_devices * 2 + tokens / data_ext * cfg.d_model * 2 * 4 * l
+        model_fl = 6.0 * n_act * tokens
+    elif shape == "prefill_32k":
+        tokens = b * s
+        fl = 2.0 * n_act * tokens
+        fl += 2.0 * tokens * s * d_attn * 0.5 * l_attn
+        p_dev = n_tot * 2 / model_ext
+        by = p_dev + tokens / data_ext * cfg.d_model * 2 * 4 * l
+        model_fl = 2.0 * n_act * tokens
+    else:  # decode (one token, cache length s)
+        fl = 2.0 * n_act * b
+        if cfg.dsa.enabled and l_attn:
+            di, hi = cfg.dsa.indexer_dim, cfg.dsa.indexer_heads
+            k = min(cfg.dsa.k, s)
+            fl += b * l_attn * (2.0 * s * hi * di      # indexer MQA (Eq. 1)
+                                + 3.0 * s              # GVR count passes
+                                + 2.0 * 2.0 * k * d_attn)  # sparse MLA
+        elif l_attn:
+            fl += b * l_attn * 2.0 * 2.0 * s * d_attn
+        # per-device bytes: full param shard each step + cache traffic
+        b_loc = max(b // data_ext, 1)
+        p_dev = n_tot * 2 / model_ext
+        cache = 0.0
+        if cfg.family == "ssm":
+            di = cfg.d_model * cfg.mamba_expand
+            cache = b_loc * l * (cfg.d_model // cfg.rwkv_head_dim) * \
+                cfg.rwkv_head_dim ** 2 * 4 * 2
+        else:
+            seq_shard = data_ext if shape == "long_500k" else 1
+            kvb = 2 * kvh * hd * 2
+            idxb = (cfg.dsa.indexer_dim * 2 + (3 + 1) * 4) if cfg.dsa.enabled else 0
+            cache = b_loc * l_attn * (s / seq_shard) * (
+                (kvb if not cfg.dsa.enabled else 0) + idxb)
+            # DSA: full KV not read — only K gathered rows + indexer cache
+            if cfg.dsa.enabled:
+                cache += b_loc * l_attn * min(cfg.dsa.k, s) * 2 * kvh * hd * 2
+        by = p_dev + cache
+        model_fl = 2.0 * n_act * b
+    return dict(flops_global=fl, bytes_per_dev=by, model_flops=model_fl)
+
+
+def analyze(path: str) -> dict:
+    d = json.load(open(path))
+    if d.get("status") != "ok":
+        return d
+    nd = d["n_devices"]
+    a = analytic_terms(d["arch"], d["shape"], nd)
+    cb = d.get("collectives", {}).get("total_bytes", 0)
+    t_c = a["flops_global"] / (nd * PEAK)
+    t_m = a["bytes_per_dev"] / HBM
+    t_i = cb / ICI
+    dom = max((t_c, "compute"), (t_m, "memory"), (t_i, "collective"))[1]
+    step = max(t_c, t_m, t_i)
+    return dict(
+        arch=d["arch"], shape=d["shape"], multi_pod=d["multi_pod"],
+        status="ok", n_devices=nd,
+        compute_s=t_c, memory_s=t_m, collective_s=t_i, dominant=dom,
+        step_s=step,
+        model_flops=a["model_flops"],
+        useful_ratio=a["model_flops"] / a["flops_global"],
+        roofline_frac=t_c / step if step else 0.0,
+        hlo_flops_bodyonce=d.get("flops_per_device", 0.0),
+        mem_gb=d.get("memory", {}).get("per_device_total", 0) / 1e9,
+        collective_detail={k: v for k, v in d.get("collectives", {}).items()
+                           if isinstance(v, dict) and v.get("count")},
+    )
+
+
+def table(outdir="results/dryrun", multi_pod=False):
+    rows = []
+    for f in sorted(glob.glob(os.path.join(outdir, "*.json"))):
+        if ("pod2" in f) != multi_pod:
+            continue
+        r = analyze(f)
+        if r.get("status") == "ok":
+            rows.append(r)
+    return rows
+
+
+def markdown(rows):
+    out = ["| arch | shape | compute s | memory s | collective s | dominant | "
+           "useful ratio | roofline frac | HBM GB/dev |",
+           "|---|---|---|---|---|---|---|---|---|"]
+    for r in sorted(rows, key=lambda r: (r["arch"], r["shape"])):
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['compute_s']:.2e} | "
+            f"{r['memory_s']:.2e} | {r['collective_s']:.2e} | "
+            f"**{r['dominant']}** | {r['useful_ratio']:.2f} | "
+            f"{r['roofline_frac']:.3f} | {r['mem_gb']:.1f} |")
+    return "\n".join(out)
+
+
+def bench_roofline():
+    rows = table()
+    out = []
+    for r in rows:
+        out.append((f"roofline/{r['arch']}/{r['shape']}", "",
+                    f"compute={r['compute_s']:.2e}s;memory={r['memory_s']:.2e}s;"
+                    f"collective={r['collective_s']:.2e}s;dom={r['dominant']};"
+                    f"roofline_frac={r['roofline_frac']:.3f}"))
+    return out
+
+
+if __name__ == "__main__":
+    print(markdown(table()))

@@ -1,0 +1,54 @@
+"""Benchmark harness — one section per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [section ...]
+
+Prints ``name,us_per_call,derived`` CSV. CPU wall numbers are measured here;
+'tpu_us'/'speedup_model' values are derived from measured iteration counts ×
+the v5e roofline traffic model (benchmarks/common.py) — both are labeled.
+"""
+
+import sys
+
+from .common import emit
+
+
+SECTIONS = {}
+
+
+def _register():
+    from . import operator_bench as ob
+    from . import system_bench as sb
+    SECTIONS.update({
+        "table1": ob.bench_table1_pass_counts,
+        "table6": ob.bench_table6_synthetic_latency,
+        "table7": ob.bench_table7_per_layer_speedup,
+        "table8": ob.bench_table8_distribution_sensitivity,
+        "table9": ob.bench_table9_preidx_ablation,
+        "table10": ob.bench_phase_breakdown,
+        "fig3": sb.bench_fig3_temporal_overlap,
+        "fig11": sb.bench_fig11_e2e_decode,
+        "kernels": sb.bench_kernels,
+    })
+    try:
+        from . import roofline
+        import glob
+        if glob.glob("results/dryrun/*pod1.json"):
+            SECTIONS["roofline"] = roofline.bench_roofline
+    except Exception:
+        pass
+
+
+def main() -> None:
+    _register()
+    names = sys.argv[1:] or list(SECTIONS)
+    rows = []
+    for name in names:
+        try:
+            rows.extend(SECTIONS[name]())
+        except Exception as e:  # noqa: BLE001 — keep the harness running
+            rows.append((f"{name}/ERROR", "", repr(e)[:120]))
+    emit(rows)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,83 @@
+"""System-level benchmarks: Fig 3 (temporal overlap), Fig 11 (E2E decode
+TPOT GVR vs radix), and the Pallas kernel micro-benches."""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.registry import get_config
+from repro.core.temporal import hit_ratio
+from repro.models.api import build_model
+from .common import emit, time_fn
+
+
+def bench_fig3_temporal_overlap():
+    """Fig 3: consecutive-step Top-K overlap measured on a REAL (toy) model's
+    decode — per layer, averaged over steps."""
+    cfg = get_config("llama3.2-1b", smoke=True)
+    model = build_model(cfg)
+    params = model.init_params(jax.random.PRNGKey(0))
+    b, max_len, steps = 2, 128, 60
+    state = model.init_decode_state(batch=b, max_len=max_len)
+    rng = np.random.default_rng(0)
+    toks = jnp.asarray(rng.integers(0, cfg.vocab, (steps, b)), jnp.int32)
+    step = jax.jit(lambda p, s, t: model.serve_step(p, s, t))
+    prevs = []
+    for t in range(steps):
+        _, state = step(params, state, toks[t])
+        prevs.append(np.asarray(state["prev_topk"]))
+    rows = []
+    k = prevs[-1].shape[-1]
+    for layer in range(cfg.n_layers):
+        hrs = [float(np.mean(np.asarray(hit_ratio(
+            jnp.asarray(prevs[t][layer]), jnp.asarray(prevs[t - 1][layer]),
+            max_len)))) for t in range(steps - 10, steps)]
+        rows.append((f"fig3/layer{layer}", "",
+                     f"overlap={np.mean(hrs):.3f};random_base={k/steps:.3f}"))
+    return rows
+
+
+def bench_fig11_e2e_decode():
+    """Fig 11 proxy: full serve_step wall time, GVR vs radix vs exact selector
+    (CPU wall; the modeled TPU numbers come from the roofline table)."""
+    base = get_config("llama3.2-1b", smoke=True)
+    rows = []
+    times = {}
+    for sel in ("gvr", "radix", "exact"):
+        cfg = dataclasses.replace(base, dsa=dataclasses.replace(base.dsa,
+                                                                selector=sel))
+        model = build_model(cfg)
+        params = model.init_params(jax.random.PRNGKey(1))
+        b, max_len = 4, 8192
+        state = model.init_decode_state(batch=b, max_len=max_len)
+        state["length"] = jnp.full((b,), 7000, jnp.int32)   # deep in context
+        tok = jnp.zeros((b,), jnp.int32)
+        f = jax.jit(lambda p, s, t: model.serve_step(p, s, t)[0])
+        us = time_fn(f, params, state, tok, iters=3, warmup=1)
+        times[sel] = us
+        rows.append((f"fig11/serve_step/{sel}", round(us, 0), "cpu_wall"))
+    rows.append(("fig11/tpot_reduction_cpu", "",
+                 f"radix_vs_gvr={times['radix']/times['gvr']:.3f}x"))
+    return rows
+
+
+def bench_kernels():
+    """Pallas kernel micro-benches (interpret mode: correctness-grade timing
+    only; the TPU cost model lives in the §Roofline table)."""
+    from repro.kernels import gvr_topk as k_gvr
+    rng = np.random.default_rng(5)
+    rows = []
+    for n in [8192, 32768]:
+        b, k = 1, 2048
+        x = jnp.asarray(rng.normal(size=(b, n)), jnp.float32)
+        prev = jnp.asarray(rng.choice(n, k, replace=False)[None], jnp.int32)
+        v, i, st = k_gvr(x, prev, k)
+        rows.append((f"kernel/gvr_topk/n={n}", "",
+                     f"I={float(np.asarray(st)[0,0]):.0f};"
+                     f"bisect={float(np.asarray(st)[0,1]):.0f};"
+                     f"cand={float(np.asarray(st)[0,2]):.0f}"))
+    return rows

@@ -1,0 +1,34 @@
+"""Serve a DSA model: batched decode with the GVR selector and temporal
+feedback; prints per-step Top-K overlap (the paper's Fig. 3 signal live).
+
+    PYTHONPATH=src python examples/serve_longcontext.py
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.registry import get_config
+from repro.core.temporal import hit_ratio
+from repro.models.api import build_model
+
+cfg = get_config("llama3.2-1b", smoke=True)
+model = build_model(cfg)
+params = model.init_params(jax.random.PRNGKey(0))
+
+B, MAX_LEN, STEPS = 4, 256, 80
+state = model.init_decode_state(batch=B, max_len=MAX_LEN)
+rng = np.random.default_rng(0)
+step = jax.jit(lambda p, s, t: model.serve_step(p, s, t))
+
+tok = jnp.asarray(rng.integers(0, cfg.vocab, (B,)), jnp.int32)
+prev = None
+for t in range(STEPS):
+    logits, state = step(params, tok, None) if False else step(params, state, tok)
+    tok = jnp.argmax(logits, -1).astype(jnp.int32)     # greedy
+    cur = state["prev_topk"][0]                        # layer 0 Top-K
+    if prev is not None and t % 10 == 0 and t > 16:
+        hr = float(np.mean(np.asarray(hit_ratio(cur, prev, MAX_LEN))))
+        print(f"step {t:3d}  len={int(state['length'][0]):3d}  "
+              f"top-k overlap vs prev step: {hr:.2f}")
+    prev = cur
+print("decode OK — temporal correlation drives the GVR warm start")

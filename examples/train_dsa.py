@@ -1,0 +1,17 @@
+"""Train a ~tiny DSA-enabled llama-family model for a few hundred steps with
+checkpoint/restart (deliverable (b): end-to-end train driver).
+
+    PYTHONPATH=src python examples/train_dsa.py [--steps 300]
+"""
+import argparse
+import subprocess
+import sys
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    args = ap.parse_args()
+    sys.exit(subprocess.call(
+        [sys.executable, "-m", "repro.launch.train", "--arch", "llama3.2-1b",
+         "--smoke", "--steps", str(args.steps), "--batch", "8", "--seq", "128",
+         "--checkpoint-dir", "/tmp/repro_ckpt", "--checkpoint-every", "50"]))

@@ -1,0 +1,18 @@
+"""Core GVR library: the paper's contribution as composable JAX modules."""
+
+from .gvr import (GVRResult, GVRStats, extract_topk, global_passes, gvr_threshold,
+                  gvr_topk, uniform_pre_idx, DEFAULT_K)
+from .rope import (compute_static_pre_idx, g_delta, generate_indexer_scores,
+                   yarn_inv_freq)
+from .sp_gvr import SPGVRResult, sp_gvr_topk, sp_gvr_topk_local
+from .temporal import TopKFeedback, hit_ratio, init_feedback, shifted_hit_ratio, update_feedback
+from .topk_baselines import exact_topk, radix_select_topk, sort_topk
+
+__all__ = [
+    "GVRResult", "GVRStats", "extract_topk", "global_passes", "gvr_threshold",
+    "gvr_topk", "uniform_pre_idx", "DEFAULT_K",
+    "compute_static_pre_idx", "g_delta", "generate_indexer_scores", "yarn_inv_freq",
+    "SPGVRResult", "sp_gvr_topk", "sp_gvr_topk_local",
+    "TopKFeedback", "hit_ratio", "init_feedback", "shifted_hit_ratio", "update_feedback",
+    "exact_topk", "radix_select_topk", "sort_topk",
+]

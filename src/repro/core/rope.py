@@ -1,0 +1,105 @@
+"""RoPE / YaRN positional-score structure (paper §3.2–3.3, Appendix E).
+
+The DSA indexer scores carry a Toeplitz positional component
+
+    g(Delta) = 2 * sum_i cos(Delta * theta_i),   theta_i = beta^(-2i/d_rope)
+
+(paper Eq. 2). Because g depends only on the relative position Delta, the
+positional score matrix is Toeplitz, and advancing the query by one step only
+perturbs the landscape smoothly — the structural basis for the temporal
+correlation GVR exploits. YaRN interpolation (scaling factor 40 in
+DeepSeek-V3.2) preserves peaks at large Delta, spreading the Top-K prior over
+both near and remote positions.
+
+`yarn_inv_freq` / `compute_static_pre_idx` / `generate_indexer_scores` are
+line-faithful ports of the paper's Appendix E listing (torch -> jnp).
+"""
+
+from __future__ import annotations
+
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+D_ROPE = 64          # indexer RoPE dimensions in DeepSeek-V3.2
+ROPE_BASE = 10000.0
+YARN_SCALING = 40.0  # DeepSeek-V3.2 YaRN scaling factor
+
+
+def yarn_inv_freq(dim: int = D_ROPE, base: float = ROPE_BASE, sf: float = YARN_SCALING,
+                  orig_max: int = 4096, bf: float = 32.0, bs: float = 1.0) -> jnp.ndarray:
+    """DeepSeek-V3.2 YaRN frequency computation (paper Appendix E, verbatim)."""
+    pos_f = base ** (np.arange(0, dim, 2, dtype=np.float32) / dim)
+    freq_extra = 1.0 / pos_f
+    freq_inter = 1.0 / (sf * pos_f)
+    lo = max(int(dim * math.log(orig_max / (bf * 2 * math.pi)) / (2 * math.log(base))), 0)
+    hi = min(int(math.ceil(dim * math.log(orig_max / (bs * 2 * math.pi)) / (2 * math.log(base)))),
+             dim - 1)
+    ramp = np.clip((np.arange(dim // 2, dtype=np.float32) - lo) / max(hi - lo, 1e-3), 0.0, 1.0)
+    return jnp.asarray(freq_inter * ramp + freq_extra * (1.0 - ramp), dtype=jnp.float32)
+
+
+def rope_inv_freq(dim: int = D_ROPE, base: float = ROPE_BASE) -> jnp.ndarray:
+    """Plain (non-YaRN) RoPE inverse frequencies."""
+    pos_f = base ** (np.arange(0, dim, 2, dtype=np.float32) / dim)
+    return jnp.asarray(1.0 / pos_f, dtype=jnp.float32)
+
+
+def g_delta(n: int, dim: int = D_ROPE, *, yarn: bool = True) -> jnp.ndarray:
+    """Positional score g(Delta) for Delta in [0, n) (paper Eq. 2).
+
+    g(Delta) = 2 * sum_i cos(Delta * theta_i) — the inner product of all-ones
+    vectors rotated by R_Delta. Global max at Delta=0; secondary peaks where
+    the 32 cosines (period ratio ~10,000:1) constructively interfere.
+    """
+    theta = yarn_inv_freq(dim) if yarn else rope_inv_freq(dim)
+    delta = jnp.arange(n, dtype=jnp.float32)
+    return 2.0 * jnp.cos(delta[:, None] * theta[None, :]).sum(axis=1)
+
+
+def compute_static_pre_idx(n: int, k: int = 2048, d_rope: int = D_ROPE) -> jnp.ndarray:
+    """preIdx from the all-ones RoPE structural prior (paper Eq. 3 / App. E).
+
+    argtopk over g(Delta): the K relative positions the RoPE frequency
+    structure inherently favors. Used as the static prediction signal for the
+    synthetic benchmark (no previous decode step available).
+    """
+    f = g_delta(n, d_rope)
+    k = min(k, n)
+    _, idx = jax.lax.top_k(f, k)
+    return idx.astype(jnp.int32)
+
+
+def apply_rope(x: jnp.ndarray, cos_t: jnp.ndarray, sin_t: jnp.ndarray) -> jnp.ndarray:
+    """Rotate pairs — matches the paper's listing layout (split-halves concat)."""
+    x1, x2 = x[..., ::2], x[..., 1::2]
+    return jnp.concatenate([x1 * cos_t - x2 * sin_t, x2 * cos_t + x1 * sin_t], axis=-1)
+
+
+@partial(jax.jit, static_argnames=("n", "k", "d_rope"))
+def _generate_scores(key: jax.Array, n: int, k: int, am: float, d_rope: int):
+    inv_freq = yarn_inv_freq(d_rope)
+    pos = jnp.arange(n, dtype=jnp.float32)
+    cos_t = jnp.cos(pos[:, None] * inv_freq[None, :])
+    sin_t = jnp.sin(pos[:, None] * inv_freq[None, :])
+    kq, kk = jax.random.split(key)
+    q = 1.0 + am * jax.random.normal(kq, (1, d_rope), dtype=jnp.float32)
+    kmat = 1.0 + am * jax.random.normal(kk, (n, d_rope), dtype=jnp.float32)
+    scores = (apply_rope(q, cos_t[:1], sin_t[:1]) @ apply_rope(kmat, cos_t, sin_t).T).squeeze(0)
+    return scores
+
+
+def generate_indexer_scores(key: jax.Array, n: int, k: int = 2048, am: float = 0.1,
+                            d_rope: int = D_ROPE):
+    """Synthetic indexer scores (random Q/K + YaRN-RoPE) + static preIdx.
+
+    Port of the paper's Appendix E `generate_indexer_scores`: the query sits
+    at position 0, keys at positions 0..n-1, so Delta = key position and the
+    static prior indexes positions directly.
+    """
+    scores = _generate_scores(key, n, k, am, d_rope)
+    pre_idx = compute_static_pre_idx(n, k, d_rope)
+    return scores, pre_idx

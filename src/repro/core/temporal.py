@@ -1,0 +1,61 @@
+"""Temporal-correlation measurement & prev-Top-K feedback state (paper §3.1).
+
+The paper's `heuristic_prev_topk` HBM feedback buffer (L × B × K int32,
+Appendix C) becomes explicit functional decode state here: each DSA layer's
+Top-K output at step t is carried to step t+1 as the prediction signal.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+class TopKFeedback(NamedTuple):
+    """Per-layer previous-step Top-K indices (the paper's prev_topk buffer)."""
+    prev_idx: jnp.ndarray   # (L, B, K) int32
+    valid: jnp.ndarray      # (L, B) bool — False until a first decode step ran
+
+
+def init_feedback(num_layers: int, batch: int, k: int,
+                  seq_len_hint: Optional[int] = None) -> TopKFeedback:
+    """Step-0 state. Indices are seeded evenly spaced over the KV prefix (or
+    [0, k) when no hint): Phase 1 then sees a uniform value sample, which is
+    still a better threshold seed than a blind radix decomposition
+    (paper Table 9 row b: even random indices give 1.44x)."""
+    n = seq_len_hint if seq_len_hint is not None else k
+    base = jnp.linspace(0, max(n - 1, 1), k).astype(jnp.int32)
+    prev = jnp.broadcast_to(base[None, None, :], (num_layers, batch, k))
+    return TopKFeedback(prev_idx=prev, valid=jnp.zeros((num_layers, batch), bool))
+
+
+def update_feedback(fb: TopKFeedback, layer: jnp.ndarray | int,
+                    new_idx: jnp.ndarray) -> TopKFeedback:
+    """Record layer's Top-K for the next decode step."""
+    prev = fb.prev_idx.at[layer].set(new_idx.astype(jnp.int32))
+    valid = fb.valid.at[layer].set(True)
+    return TopKFeedback(prev_idx=prev, valid=valid)
+
+
+def hit_ratio(idx_t: jnp.ndarray, idx_tm1: jnp.ndarray, n: int) -> jnp.ndarray:
+    """Raw Top-K overlap between consecutive steps (paper Fig. 3).
+
+    alpha = |P ∩ S*| / |P| via dense membership bitmaps (no sort needed).
+    idx_*: (..., K) int32. `n` bounds the index space.
+    """
+    def one(a, b):
+        bm = jnp.zeros((n,), bool).at[jnp.clip(b, 0, n - 1)].set(True)
+        return jnp.mean(bm[jnp.clip(a, 0, n - 1)].astype(jnp.float32))
+    flat_t = idx_t.reshape(-1, idx_t.shape[-1])
+    flat_p = idx_tm1.reshape(-1, idx_tm1.shape[-1])
+    r = jax.vmap(one)(flat_t, flat_p)
+    return r.reshape(idx_t.shape[:-1])
+
+
+def shifted_hit_ratio(idx_t: jnp.ndarray, idx_tm1: jnp.ndarray, n: int,
+                      shift: int = 1) -> jnp.ndarray:
+    """Shifted overlap (paper §3.1): prev indices advanced by `shift` before
+    comparison — visualizes the Toeplitz translation of the score landscape."""
+    return hit_ratio(idx_t, idx_tm1 + shift, n)

@@ -1,0 +1,132 @@
+"""Baseline exact Top-K implementations (paper §2.2–2.3, Table 1).
+
+* `radix_select_topk` — faithful JAX port of the production TensorRT-LLM
+  radix-select structure: monotone FP32→uint32 key transform, iterative
+  digit-group narrowing (histogram → cumulative-from-top → K-th bucket →
+  recurse), early exit to direct selection when the surviving bucket is
+  small. Digit schedule 11→11→10 (2048/2048/1024-bin histograms — the
+  paper's SMEM-sized buckets). Distribution-agnostic: R depends only on how
+  the data's bit patterns cluster, never on any prediction signal.
+* `sort_topk` — the torch.topk-style O(N log N) full-sort reference.
+* `exact_topk` — jax.lax.top_k (XLA's tuned primitive), the correctness
+  oracle everywhere in tests.
+
+All return the same (values, indices) contract as gvr_topk, with
+lowest-index-first tie semantics.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .gvr import extract_topk
+
+RADIX_SCHEDULE = (11, 11, 10)  # paper's digit schedule (<=2048-bin histograms)
+EARLY_EXIT = 2048             # paper: switch to sort/ranking below 2048 survivors
+
+
+class RadixStats(NamedTuple):
+    passes: jnp.ndarray        # int32 (B,) — digit passes actually needed
+    survivors: jnp.ndarray     # int32 (B,) — bucket size at early exit
+    threshold: jnp.ndarray     # float32 (B,) — exact K-th value
+
+
+def _float_to_sortable_u32(x: jnp.ndarray) -> jnp.ndarray:
+    """Monotone map: f32 total order (incl. -0.0 < +0.0) -> u32 order."""
+    u = jax.lax.bitcast_convert_type(x.astype(jnp.float32), jnp.uint32)
+    sign = (u >> 31) == 1
+    return jnp.where(sign, ~u, u | jnp.uint32(0x80000000))
+
+
+def _sortable_u32_to_float(u: jnp.ndarray) -> jnp.ndarray:
+    sign = (u >> 31) == 0          # originally negative
+    v = jnp.where(sign, ~u, u & jnp.uint32(0x7FFFFFFF))
+    return jax.lax.bitcast_convert_type(v, jnp.float32)
+
+
+@partial(jax.jit, static_argnames=("k", "schedule", "early_exit"))
+def radix_select_topk(scores: jnp.ndarray, k: int, *,
+                      schedule: tuple = RADIX_SCHEDULE,
+                      early_exit: int = EARLY_EXIT):
+    """Exact Top-K via radix select. scores: (B, N) or (N,)."""
+    squeeze = scores.ndim == 1
+    x = scores[None] if squeeze else scores
+    x = x.astype(jnp.float32)
+    b, n = x.shape
+    if k > n:
+        raise ValueError(f"k={k} > n={n}")
+    u = _float_to_sortable_u32(x)
+
+    early_exit = max(int(early_exit), k)       # survivor tail must cover k_rem
+    prefix = jnp.zeros((b,), jnp.uint32)       # selected high bits so far
+    bits_done = 0
+    bits_res = jnp.zeros((b,), jnp.int32)      # per-row resolved bits (freezes at exit)
+    k_rem = jnp.full((b,), k, jnp.int32)
+    done = jnp.zeros((b,), bool)               # early-exited
+    passes = jnp.zeros((b,), jnp.int32)
+    survivors = jnp.full((b,), n, jnp.int32)
+
+    for d in schedule:
+        shift = 32 - bits_done - d
+        nb = 1 << d
+        active = jnp.ones((b, n), bool) if bits_done == 0 else \
+            (u >> jnp.uint32(32 - bits_done)) == prefix[:, None]
+        digit = ((u >> jnp.uint32(shift)) & jnp.uint32(nb - 1)).astype(jnp.int32)
+        hist = jax.vmap(
+            lambda dg, m: jax.ops.segment_sum(m.astype(jnp.int32), dg, num_segments=nb)
+        )(digit, active)
+        ctop = jnp.cumsum(hist[:, ::-1], axis=-1)[:, ::-1]   # count in buckets >= j
+        jstar = jnp.sum((ctop >= k_rem[:, None]).astype(jnp.int32), axis=-1) - 1
+        jstar = jnp.maximum(jstar, 0)
+        above = jnp.where(jstar + 1 < nb,
+                          jnp.take_along_axis(ctop, jnp.minimum(jstar + 1, nb - 1)[:, None],
+                                              axis=-1)[:, 0],
+                          0)                                  # emitted directly
+        in_bucket = jnp.take_along_axis(hist, jstar[:, None], axis=-1)[:, 0]
+        k_rem = jnp.where(done, k_rem, k_rem - above)
+        prefix = jnp.where(done, prefix,
+                           (prefix << jnp.uint32(d)) | jstar.astype(jnp.uint32))
+        passes = jnp.where(done, passes, passes + 1)
+        survivors = jnp.where(done, survivors, in_bucket)
+        bits_res = jnp.where(done, bits_res, bits_res + d)
+        done = done | (in_bucket <= early_exit)
+        bits_done += d
+
+    # The per-row prefix (bits_res bits) pins the K-th key's bucket: the
+    # exact K-th value is the k_rem-th largest among keys matching the
+    # prefix — <= early_exit survivors, resolved directly (the paper's
+    # CUB-sort tail). Per-row dynamic shift handles rows that early-exited
+    # at different passes.
+    shift = jnp.minimum(32 - bits_res, 31).astype(jnp.uint32)   # clamp: UB guard
+    in_pref = jnp.where(bits_res[:, None] == 0, True,
+                        (u >> shift[:, None]) == prefix[:, None])
+    neg = jnp.float32(jnp.finfo(jnp.float32).min)
+    surv_vals = jnp.where(in_pref, x, neg)
+    # k_rem-th largest among survivors == exact global K-th value.
+    topv = jax.lax.top_k(surv_vals, min(int(early_exit) + 1, n))[0]
+    t_star = jnp.take_along_axis(topv, (k_rem - 1)[:, None], axis=-1)[:, 0]
+
+    vals, idx = extract_topk(x, t_star, k)
+    stats = RadixStats(passes=passes, survivors=survivors, threshold=t_star)
+    if squeeze:
+        return vals[0], idx[0], RadixStats(*[s[0] for s in stats])
+    return vals, idx, stats
+
+
+@partial(jax.jit, static_argnames=("k",))
+def sort_topk(scores: jnp.ndarray, k: int):
+    """torch.topk-style baseline: full descending sort, take K."""
+    order = jnp.argsort(-scores, axis=-1, stable=True)
+    idx = order[..., :k].astype(jnp.int32)
+    vals = jnp.take_along_axis(scores, idx, axis=-1)
+    return vals, idx
+
+
+def exact_topk(scores: jnp.ndarray, k: int):
+    """XLA's lax.top_k — the oracle."""
+    vals, idx = jax.lax.top_k(scores, k)
+    return vals, idx.astype(jnp.int32)

@@ -1,0 +1,12 @@
+"""Pallas TPU kernels for the DSA decode hot spots.
+
+- gvr_topk      : fused Guess-Verify-Refine exact Top-K (VMEM-resident row)
+- indexer_topk  : fused indexer scoring + GVR (scores never touch HBM)
+- sparse_attn   : Top-K gathered decode attention (scalar-prefetch gather)
+
+ops.py exposes the jit'd wrappers; ref.py the pure-jnp oracles.
+"""
+
+from .ops import gvr_topk, indexer_topk, sparse_decode_attn
+
+__all__ = ["gvr_topk", "indexer_topk", "sparse_decode_attn"]

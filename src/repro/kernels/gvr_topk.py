@@ -1,0 +1,359 @@
+"""Pallas TPU kernel: fused Guess-Verify-Refine exact Top-K.
+
+One program per batch row (grid=(B,)). The score row (N ≤ 512K → ≤ 2 MB f32)
+is brought HBM→VMEM once by the BlockSpec — after that every phase is
+on-chip, so the kernel's HBM traffic is the roofline minimum
+(N·4B in + K·8B out + M·4B prediction):
+
+  P1  gather prev-Top-K values (VMEM gather) → pmin/pmean/pmax.
+  P2  secant threshold search — each iteration is a VPU count-reduction
+      over the resident row (the paper's blockCountGE, minus the HBM cost).
+  P3  candidate collection into a VMEM buffer. TPU has no per-thread
+      scatter/ballot; compaction is done per chunk with a *radix-factored
+      one-hot contraction* on the MXU:  compacted = A_hiᵀ @ (A_lo ⊙ v),
+      where pos = 32·hi + lo and A_hi/A_lo are (chunk × 32) one-hots —
+      O(chunk·64) VPU compares + two skinny MXU matmuls instead of an
+      O(chunk²) dense one-hot. Chunks with no candidates are predicated
+      away (pl.when).
+  P4  exact refine on the candidate buffer via *bit-space bisection*:
+      bisect the sortable-int32 image of f32, guaranteeing ≤ 32 exactly
+      convergent iterations of (cheap, buffer-resident) count passes. This
+      replaces the paper's SMEM histogram + snap stepping: on TPU the
+      buffer is VMEM-resident so bounded bisection dominates both. The
+      count at the final key IS n_gt/n_ge — tie partition follows.
+  P5  emit exactly K (all > T* plus lowest-index ties) with the same
+      factored compaction, from the buffer when it's valid, else from the
+      full row (overflow fallback — >C candidates, e.g. massive ties).
+
+Validated with interpret=True against kernels/ref.py (lax.top_k oracle).
+Mosaic-lowering notes: the P1 gather uses jnp.take (dynamic VMEM gather);
+cumsum/iota use 2D broadcasted forms where it matters. The factored one-hot
+contraction and all count reductions are plain compare/matmul/reduce ops.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_CHUNK = 512
+RADIX = 32  # factored one-hot radix: pos = RADIX*hi + lo
+
+
+def _to_key_u(x):
+    """f32 -> uint32 monotone key (matches topk_baselines transform)."""
+    u = jax.lax.bitcast_convert_type(x, jnp.uint32)
+    sign = (u >> 31) == 1
+    return jnp.where(sign, ~u, u | jnp.uint32(0x80000000))
+
+
+def _from_key_u(u):
+    sign = (u >> 31) == 0
+    v = jnp.where(sign, ~u, u & jnp.uint32(0x7FFFFFFF))
+    return jax.lax.bitcast_convert_type(v, jnp.float32)
+
+
+def _count_ge(x, t):
+    return jnp.sum((x >= t).astype(jnp.int32))
+
+
+def _compact_chunk(vals, gidx_f, sel, chunk):
+    """Radix-factored one-hot compaction of one chunk.
+
+    Returns (cvals, cidx_f, count): selected entries packed to the front (in
+    original order), garbage beyond `count`.
+    """
+    pos = jnp.cumsum(sel.astype(jnp.int32)) - 1            # target slots
+    cnt = jnp.sum(sel.astype(jnp.int32))
+    # Sanitize unselected lanes: NaN/inf garbage (e.g. uninitialized scratch)
+    # would poison the contraction through 0*NaN.
+    vals = jnp.where(sel, vals, 0.0)
+    gidx_f = jnp.where(sel, gidx_f, 0.0)
+    hi = pos // RADIX
+    lo = pos - hi * RADIX
+    nhi = chunk // RADIX
+    iota_hi = jax.lax.broadcasted_iota(jnp.int32, (chunk, nhi), 1)
+    iota_lo = jax.lax.broadcasted_iota(jnp.int32, (chunk, RADIX), 1)
+    selc = sel.astype(jnp.float32)
+    a_hi = (hi[:, None] == iota_hi).astype(jnp.float32) * selc[:, None]   # (chunk, nhi)
+    a_lo = (lo[:, None] == iota_lo).astype(jnp.float32)                    # (chunk, RADIX)
+    # compacted[p] with p = RADIX*ph + pl_:  A_hiᵀ @ (A_lo ⊙ v) — exact in f32
+    def route(v):
+        t = a_hi.T @ (a_lo * v[:, None])                   # (nhi, RADIX)
+        return t.reshape(chunk)
+    return route(vals), route(gidx_f), cnt
+
+
+def _bisect_exact_kth(count_ge_fn, lo_f, hi_f, k):
+    """Exact K-th largest via bisection on the sortable-int image of f32.
+
+    Invariant: count_ge(lo) >= k, count_ge(above hi) < k. Terminates in
+    <= 32 iterations at adjacent keys; returns (t_star, n_gt, n_ge, iters).
+    """
+    lo_k = _to_key_u(lo_f)
+    hi_k = _to_key_u(hi_f)
+
+    def cond(s):
+        lo_k, hi_k, it = s
+        return (hi_k - lo_k > jnp.uint32(1)) & (it < 34)
+
+    def body(s):
+        lo_k, hi_k, it = s
+        mid = lo_k + (hi_k - lo_k) // jnp.uint32(2)
+        c = count_ge_fn(_from_key_u(mid))
+        lo_k = jnp.where(c >= k, mid, lo_k)
+        hi_k = jnp.where(c >= k, hi_k, mid)
+        return lo_k, hi_k, it + 1
+
+    lo_k, hi_k, iters = jax.lax.while_loop(cond, body, (lo_k, hi_k, jnp.int32(0)))
+    t_star = _from_key_u(lo_k)
+    n_ge = count_ge_fn(t_star)
+    n_gt = count_ge_fn(_from_key_u(lo_k + jnp.uint32(1)))
+    return t_star, n_gt, n_ge, iters
+
+
+def _gvr_kernel(scores_ref, prev_ref, out_vals_ref, out_idx_ref, stats_ref,
+                cand_vals_ref, cand_idx_ref, out_v_scr, out_i_scr, *,
+                k, cmax, n, m, chunk, max_secant, f_target):
+    x = scores_ref[0, :]                                   # (N,) f32, VMEM-resident
+    gvr_on_resident_row(x, prev_ref[0, :], out_vals_ref, out_idx_ref, stats_ref,
+                        cand_vals_ref, cand_idx_ref, out_v_scr, out_i_scr,
+                        k=k, cmax=cmax, n=n, m=m, chunk=chunk,
+                        max_secant=max_secant, f_target=f_target)
+
+
+def gvr_on_resident_row(x, prev_idx, out_vals_ref, out_idx_ref, stats_ref,
+                        cand_vals_ref, cand_idx_ref, out_v_scr, out_i_scr, *,
+                        k, cmax, n, m, chunk, max_secant, f_target):
+    """All four GVR phases over a VMEM-resident score vector `x` (N,).
+
+    Shared between the standalone Top-K kernel and the fused indexer+Top-K
+    kernel (where `x` lives in a scores scratch that never visits HBM).
+    """
+    nchunks = n // chunk
+    fmax = jnp.float32(jnp.finfo(jnp.float32).max)
+
+    # ---------------- Phase 1: pre-indexed statistics -------------------
+    pv = jnp.take(x, prev_idx, axis=0)                     # VMEM gather
+    p_lo = jnp.min(pv)
+    p_hi = jnp.max(pv)
+    t0 = jnp.mean(pv)
+    row_max = jnp.max(x)
+    row_min = jnp.min(x)
+    if m < k:
+        p_lo = jnp.minimum(p_lo, row_min)
+        p_hi = jnp.maximum(p_hi, row_max)
+
+    # ---------------- Phase 2: secant threshold search ------------------
+    ftarget = jnp.float32(f_target)
+
+    def secant_body(s):
+        (t_lo, c_lo, t_hi, c_hi, t, t_probe, cnt, hi_probed, prev_over,
+         done, it) = s
+        n_ge = _count_ge(x, t)
+        in_window = (n_ge >= k) & (n_ge <= cmax)
+        done2 = done | in_window
+        too_many = ~done & (n_ge > cmax)
+        too_few = ~done & (n_ge < k)
+        t_lo = jnp.where(too_many, t, t_lo)
+        c_lo = jnp.where(too_many, n_ge.astype(jnp.float32), c_lo)
+        t_hi = jnp.where(too_few, t, t_hi)
+        c_hi = jnp.where(too_few, n_ge.astype(jnp.float32), c_hi)
+        denom = c_lo - c_hi
+        frac = jnp.where(jnp.abs(denom) > 0, (c_lo - ftarget) / denom, jnp.float32(0.5))
+        frac = jnp.where(it == 0, jnp.minimum(frac, 0.5), frac)
+        t_new = t_lo + frac * (t_hi - t_lo)
+        inside = (t_new > t_lo) & (t_new < t_hi) & jnp.isfinite(t_new)
+        t_new = jnp.where(inside, t_new, 0.5 * (t_lo + t_hi))
+        probe_lo = (frac <= 0) & (t_lo != t)
+        t_new = jnp.where(probe_lo, t_lo, t_new)
+        probe_hi = too_many & prev_over & ~hi_probed & (t_hi != t)
+        t_new = jnp.where(probe_hi, t_hi, t_new)
+        collapsed = ~((t_new > t_lo) & (t_new < t_hi)) & ~probe_lo & ~probe_hi
+        rescue_hi = collapsed & too_many & (row_max > t_hi)
+        t_hi = jnp.where(rescue_hi, row_max, t_hi)
+        c_hi = jnp.where(rescue_hi, jnp.float32(1.0), c_hi)
+        rescue_lo = collapsed & too_few & (row_min < t_lo)
+        t_lo = jnp.where(rescue_lo, row_min, t_lo)
+        c_lo = jnp.where(rescue_lo, jnp.float32(n), c_lo)
+        rescued = rescue_hi | rescue_lo
+        t_new = jnp.where(rescued, 0.5 * (t_lo + t_hi), t_new)
+        collapsed = collapsed & ~rescued
+        t_new = jnp.where(collapsed, t_lo, t_new)
+        done2 = done2 | collapsed
+        return (t_lo, c_lo, t_hi, c_hi,
+                jnp.where(done2, t, t_new), t,
+                n_ge,
+                jnp.where(rescue_hi, False, hi_probed | probe_hi),
+                too_many, done2, it + 1)
+
+    def secant_cond(s):
+        done, it = s[-2], s[-1]
+        return ~done & (it < max_secant)
+
+    t0c = jnp.clip(t0, p_lo, p_hi)
+    init = (p_lo, jnp.float32(min(n, max(1.25 * m, k))),
+            jnp.maximum(p_hi, p_lo), jnp.float32(1.0),
+            t0c, t0c, jnp.int32(0), False, False, False, jnp.int32(0))
+    (t_lo, _c_lo, _t_hi, _c_hi, _t, t_probe, cnt, _hp, _po, _done,
+     secant_iters) = jax.lax.while_loop(secant_cond, secant_body, init)
+    t_exit = jnp.where(cnt >= k, t_probe, t_lo)
+    c_exit = _count_ge(x, t_exit)
+    buffer_ok = c_exit <= cmax          # else overflow → full-row refine
+
+    # ---------------- Phase 3: candidate collection ---------------------
+    def collect(_):
+        def chunk_body(j, base):
+            xm = jax.lax.dynamic_slice(x, (j * chunk,), (chunk,))
+            sel = xm >= t_exit
+            gidx_f = (jax.lax.broadcasted_iota(jnp.int32, (1, chunk), 1)[0]
+                      + j * chunk).astype(jnp.float32)
+            cv, ci, c = _compact_chunk(xm, gidx_f, sel, chunk)
+
+            @pl.when(c > 0)
+            def _():
+                cand_vals_ref[pl.ds(base, chunk)] = cv
+                cand_idx_ref[pl.ds(base, chunk)] = ci
+            return base + c
+        return jax.lax.fori_loop(0, nchunks, chunk_body, jnp.int32(0))
+
+    total = jax.lax.cond(buffer_ok, collect, lambda _: jnp.int32(0), None)
+
+    # ---------------- Phase 4: exact refine (bit-bisection) -------------
+    cpad = cand_vals_ref.shape[0]
+    bpos = jax.lax.broadcasted_iota(jnp.int32, (1, cpad), 1)[0]
+
+    def count_buf(t):
+        bv = cand_vals_ref[...]
+        valid = bpos < total
+        return jnp.sum((valid & (bv >= t)).astype(jnp.int32))
+
+    def count_row(t):
+        return _count_ge(x, t)
+
+    # bracket: count_ge(lo0) >= k. t_exit qualifies when c_exit >= k, else row_min.
+    lo0 = jnp.where(c_exit >= k, t_exit, row_min)
+    t_star_b, n_gt_b, n_ge_b, bi_b = jax.lax.cond(
+        buffer_ok,
+        lambda _: _bisect_exact_kth(count_buf, lo0, row_max, k),
+        lambda _: _bisect_exact_kth(count_row, lo0, row_max, k),
+        None)
+    t_star, n_gt, n_ge, bisect_iters = t_star_b, n_gt_b, n_ge_b, bi_b
+    quota = k - n_gt                                        # ties to take
+
+    # ---------------- Phase 5: emit exactly K ---------------------------
+    def emit_from_buffer(_):
+        bv = cand_vals_ref[...]
+        bi = cand_idx_ref[...]
+        valid = bpos < total
+        eq = valid & (bv == t_star)
+        eq_rank = jnp.cumsum(eq.astype(jnp.int32))          # inclusive
+        sel_all = (valid & (bv > t_star)) | (eq & (eq_rank <= quota))
+
+        def chunk_body(j, base):
+            sl = jax.lax.dynamic_slice
+            cv, ci, c = _compact_chunk(sl(bv, (j * chunk,), (chunk,)),
+                                       sl(bi, (j * chunk,), (chunk,)),
+                                       sl(sel_all, (j * chunk,), (chunk,)), chunk)
+
+            @pl.when(c > 0)
+            def _():
+                out_v_scr[pl.ds(base, chunk)] = cv
+                out_i_scr[pl.ds(base, chunk)] = ci
+            return base + c
+        return jax.lax.fori_loop(0, cpad // chunk, chunk_body, jnp.int32(0))
+
+    def emit_from_row(_):
+        # overflow fallback: stream the row; running tie-rank carried across
+        # chunks keeps the lowest-index tie policy.
+        def chunk_body(j, carry):
+            base, eq_seen = carry
+            xm = jax.lax.dynamic_slice(x, (j * chunk,), (chunk,))
+            eq = xm == t_star
+            eq_rank = eq_seen + jnp.cumsum(eq.astype(jnp.int32))
+            sel = (xm > t_star) | (eq & (eq_rank <= quota))
+            gidx_f = (jax.lax.broadcasted_iota(jnp.int32, (1, chunk), 1)[0]
+                      + j * chunk).astype(jnp.float32)
+            cv, ci, c = _compact_chunk(xm, gidx_f, sel, chunk)
+
+            @pl.when(c > 0)
+            def _():
+                out_v_scr[pl.ds(base, chunk)] = cv
+                out_i_scr[pl.ds(base, chunk)] = ci
+            return base + c, eq_seen + jnp.sum(eq.astype(jnp.int32))
+        out = jax.lax.fori_loop(0, nchunks, chunk_body,
+                                (jnp.int32(0), jnp.int32(0)))
+        return out[0]
+
+    emitted = jax.lax.cond(buffer_ok, emit_from_buffer, emit_from_row, None)
+
+    out_vals_ref[0, :] = out_v_scr[:k]
+    out_idx_ref[0, :] = out_i_scr[:k].astype(jnp.int32)
+    stats_ref[0, 0] = secant_iters.astype(jnp.float32)
+    stats_ref[0, 1] = bisect_iters.astype(jnp.float32)
+    stats_ref[0, 2] = c_exit.astype(jnp.float32)
+    stats_ref[0, 3] = jnp.where(buffer_ok, 0.0, 1.0)        # fallback flag
+    stats_ref[0, 4] = t_star
+    stats_ref[0, 5] = n_gt.astype(jnp.float32)
+    stats_ref[0, 6] = n_ge.astype(jnp.float32)
+    stats_ref[0, 7] = emitted.astype(jnp.float32)
+
+
+def gvr_topk_pallas(scores: jnp.ndarray, prev_idx: jnp.ndarray, k: int,
+                    *, max_candidates: Optional[int] = None,
+                    chunk: int = DEFAULT_CHUNK,
+                    max_secant_iters: int = 12,
+                    f_target: Optional[int] = None,
+                    interpret: bool = True):
+    """pl.pallas_call wrapper. scores: (B, N) f32; prev_idx: (B, M) int32.
+
+    Returns (values (B,K) f32, indices (B,K) i32, stats (B,8) f32).
+    N must be a multiple of `chunk` (ops.py pads with -FLT_MAX).
+    """
+    b, n = scores.shape
+    m = prev_idx.shape[-1]
+    assert n % chunk == 0, (n, chunk)
+    cmax = max_candidates if max_candidates is not None else min(3 * k, n)
+    cmax = max(cmax, k)
+    cpad = ((cmax + chunk - 1) // chunk + 1) * chunk
+    opad = ((k + chunk - 1) // chunk + 1) * chunk
+    ft = f_target if f_target is not None else (k + cmax) // 2
+
+    kern = functools.partial(_gvr_kernel, k=k, cmax=cmax, n=n, m=m, chunk=chunk,
+                             max_secant=max_secant_iters, f_target=ft)
+    out_shapes = (
+        jax.ShapeDtypeStruct((b, k), jnp.float32),
+        jax.ShapeDtypeStruct((b, k), jnp.int32),
+        jax.ShapeDtypeStruct((b, 8), jnp.float32),
+    )
+    grid = (b,)
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, n), lambda i: (i, 0)),
+            pl.BlockSpec((1, m), lambda i: (i, 0)),
+        ],
+        out_specs=(
+            pl.BlockSpec((1, k), lambda i: (i, 0)),
+            pl.BlockSpec((1, k), lambda i: (i, 0)),
+            pl.BlockSpec((1, 8), lambda i: (i, 0)),
+        ),
+        out_shape=out_shapes,
+        scratch_shapes=[
+            pltpu_vmem((cpad,), jnp.float32),
+            pltpu_vmem((cpad,), jnp.float32),
+            pltpu_vmem((opad,), jnp.float32),
+            pltpu_vmem((opad,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(scores.astype(jnp.float32), prev_idx.astype(jnp.int32))
+
+
+def pltpu_vmem(shape, dtype):
+    from jax.experimental.pallas import tpu as pltpu
+    return pltpu.VMEM(shape, dtype)

@@ -1,0 +1,97 @@
+"""jit'd public wrappers around the Pallas kernels (padding + dtype contracts).
+
+Each op pads ragged/odd shapes to the kernel's tiling contract, runs the
+kernel (interpret=True on CPU, compiled on TPU), and strips padding. The
+pure-jnp oracles live in ref.py; tests assert allclose across a
+shape × dtype × distribution sweep.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .gvr_topk import DEFAULT_CHUNK, gvr_topk_pallas
+from .indexer_topk import indexer_topk_pallas
+from .sparse_attn import sparse_decode_attn_pallas
+
+NEG = -3.4028235e38
+
+
+def _pad_rows(x: jnp.ndarray, mult: int, value) -> jnp.ndarray:
+    n = x.shape[-1]
+    pad = (-n) % mult
+    if pad == 0:
+        return x
+    return jnp.pad(x, [(0, 0)] * (x.ndim - 1) + [(0, pad)], constant_values=value)
+
+
+@partial(jax.jit, static_argnames=("k", "chunk", "max_candidates",
+                                   "max_secant_iters", "interpret"))
+def gvr_topk(scores: jnp.ndarray, prev_idx: jnp.ndarray, k: int,
+             *, lengths: Optional[jnp.ndarray] = None,
+             chunk: int = DEFAULT_CHUNK,
+             max_candidates: Optional[int] = None,
+             max_secant_iters: int = 12,
+             interpret: bool = True):
+    """Exact Top-K with GVR (Pallas). scores (B,N) f32; prev_idx (B,M) i32.
+
+    Returns (values (B,K) f32, indices (B,K) i32, stats (B,8) f32).
+    stats columns: [secant_iters, bisect_iters, cand_count, fallback,
+                    threshold, n_gt, n_ge, emitted].
+    """
+    squeeze = scores.ndim == 1
+    x = scores[None] if squeeze else scores
+    p = prev_idx[None] if squeeze else prev_idx
+    x = x.astype(jnp.float32)
+    if lengths is not None:
+        ln = lengths[None] if squeeze else lengths
+        pos = jnp.arange(x.shape[-1], dtype=jnp.int32)
+        x = jnp.where(pos[None, :] < ln[:, None], x, NEG)
+    x = _pad_rows(x, chunk, NEG)
+    v, i, s = gvr_topk_pallas(x, p.astype(jnp.int32), k, chunk=chunk,
+                              max_candidates=max_candidates,
+                              max_secant_iters=max_secant_iters,
+                              interpret=interpret)
+    if squeeze:
+        return v[0], i[0], s[0]
+    return v, i, s
+
+
+@partial(jax.jit, static_argnames=("k", "kv_chunk", "chunk", "interpret"))
+def indexer_topk(q: jnp.ndarray, kcache: jnp.ndarray, w: jnp.ndarray,
+                 prev_idx: jnp.ndarray, k: int,
+                 *, lengths: Optional[jnp.ndarray] = None,
+                 kv_chunk: int = 2048, chunk: int = DEFAULT_CHUNK,
+                 interpret: bool = True):
+    """Fused DSA indexer scoring + GVR Top-K (scores never touch HBM)."""
+    b, _, _ = q.shape
+    n = kcache.shape[1]
+    kv_chunk = min(kv_chunk, n)
+    # pad the cache length to the kv_chunk/chunk lattice; padded positions are
+    # masked by `lengths` inside the kernel
+    mult = max(kv_chunk, chunk)
+    pad = (-n) % mult
+    if pad:
+        kcache = jnp.pad(kcache, ((0, 0), (0, pad), (0, 0)))
+    if lengths is None:
+        lengths = jnp.full((b,), n, jnp.int32)
+    return indexer_topk_pallas(q, kcache, w, prev_idx, k, lengths=lengths,
+                               kv_chunk=kv_chunk, chunk=chunk,
+                               interpret=interpret)
+
+
+@partial(jax.jit, static_argnames=("scale", "gather_block", "gather_mode",
+                                   "interpret"))
+def sparse_decode_attn(q: jnp.ndarray, kcache: jnp.ndarray, vcache: jnp.ndarray,
+                       idx: jnp.ndarray, *, scale: Optional[float] = None,
+                       gather_block: int = 8, gather_mode: str = "pregather",
+                       interpret: bool = True):
+    """Decode attention over the Top-K selected tokens only (B,H,DV)."""
+    return sparse_decode_attn_pallas(q, kcache, vcache, idx, scale=scale,
+                                     gather_block=gather_block,
+                                     gather_mode=gather_mode,
+                                     interpret=interpret)

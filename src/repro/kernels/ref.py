@@ -1,0 +1,61 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def topk_ref(scores: jnp.ndarray, k: int):
+    """Exact Top-K oracle with lowest-index ties (multiset-of-values exact)."""
+    vals, idx = jax.lax.top_k(scores.astype(jnp.float32), k)
+    return vals, idx.astype(jnp.int32)
+
+
+def indexer_scores_ref(q: jnp.ndarray, kcache: jnp.ndarray, w: jnp.ndarray,
+                       lengths=None):
+    """DSA indexer (paper Eq. 1): I = sum_j w_j * ReLU(q_j · K^T).
+
+    q: (B, H, D); kcache: (B, N, D); w: (B, H) or (H,). Returns (B, N) f32.
+    """
+    s = jnp.einsum("bhd,bnd->bhn", q.astype(jnp.float32), kcache.astype(jnp.float32))
+    s = jax.nn.relu(s)
+    if w.ndim == 1:
+        w = jnp.broadcast_to(w[None], (q.shape[0], w.shape[0]))
+    out = jnp.einsum("bh,bhn->bn", w.astype(jnp.float32), s)
+    if lengths is not None:
+        n = kcache.shape[1]
+        pos = jnp.arange(n)[None, :]
+        out = jnp.where(pos < lengths[:, None], out, jnp.float32(-3.4028235e38))
+    return out
+
+
+def sparse_decode_attn_ref(q: jnp.ndarray, kcache: jnp.ndarray, vcache: jnp.ndarray,
+                           idx: jnp.ndarray, counts=None, scale=None):
+    """Sparse decode attention oracle: attend only over gathered Top-K rows.
+
+    q: (B, H, D); k/vcache: (B, N, KVH, D); idx: (B, K) int32 (may contain -1
+    padding when `counts` given). GQA: head h uses kv head h // (H // KVH).
+    Returns (B, H, D) f32.
+    """
+    b, h, d = q.shape
+    kvh = kcache.shape[2]
+    scale = scale if scale is not None else 1.0 / jnp.sqrt(d)
+    idx_safe = jnp.clip(idx, 0, kcache.shape[1] - 1)
+    kg = jnp.take_along_axis(kcache, idx_safe[:, :, None, None].repeat(kvh, 2)
+                             .repeat(kcache.shape[-1], 3), axis=1)   # (B, K, KVH, D)
+    vg = jnp.take_along_axis(vcache, idx_safe[:, :, None, None].repeat(kvh, 2)
+                             .repeat(vcache.shape[-1], 3), axis=1)
+    group = h // kvh
+    kq = kg[:, :, (jnp.arange(h) // group), :]                        # (B, K, H, D)
+    vq = vg[:, :, (jnp.arange(h) // group), :]
+    logits = jnp.einsum("bhd,bkhd->bhk", q.astype(jnp.float32),
+                        kq.astype(jnp.float32)) * scale
+    if counts is not None:
+        kk = idx.shape[1]
+        mask = jnp.arange(kk)[None, None, :] < counts[:, None, None]
+        logits = jnp.where(mask, logits, -jnp.inf)
+    else:
+        logits = jnp.where((idx >= 0)[:, None, :], logits, -jnp.inf)
+    p = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("bhk,bkhd->bhd", p, vq.astype(jnp.float32))

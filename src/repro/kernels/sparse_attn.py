@@ -1,0 +1,149 @@
+"""Pallas TPU kernel: sparse decode attention over Top-K gathered tokens.
+
+The DSA "sparse MLA" stage: one query token attends over exactly the K
+(=2048) KV-cache rows selected by the Top-K stage, regardless of context
+length N — O(K) traffic (paper Table 2).
+
+TPU adaptation of the GPU gather: the Top-K indices are *scalar-prefetched*
+(PrefetchScalarGridSpec), so the BlockSpec index_map itself gathers — each
+grid step DMAs the (gather_block × KVH × D) cache rows addressed by the
+next index. Flash-style online softmax (running max / denominator / value
+accumulator in VMEM scratch) accumulates across grid steps; GQA maps head
+h to kv-head h // (H / KVH).
+
+Index granularity is `gather_block` consecutive Top-K entries per grid step
+(token-granular DMA when 1). Production kernels would coarsen to KV pages;
+we note this in DESIGN.md §adaptation — the dry-run/roofline path uses the
+XLA gather in the model layer, while this kernel is the TPU hot-spot form.
+
+Padding contract: invalid idx entries are < 0 — the wrapper clips them for
+addressing and masks their logits to -inf.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _attn_kernel(idx_ref, q_ref, k_ref, v_ref, o_ref,
+                 m_scr, l_scr, acc_scr, *, nsteps, kk, scale, h, kvh, dv):
+    b = pl.program_id(0)
+    j = pl.program_id(1)
+    g = h // kvh
+
+    @pl.when(j == 0)
+    def _():
+        m_scr[...] = jnp.full_like(m_scr[...], -jnp.inf)
+        l_scr[...] = jnp.zeros_like(l_scr[...])
+        acc_scr[...] = jnp.zeros_like(acc_scr[...])
+
+    q = q_ref[0].astype(jnp.float32)                     # (H, D)
+    kb = k_ref[0].astype(jnp.float32)                    # (GB, KVH, D)
+    vb = v_ref[0].astype(jnp.float32)                    # (GB, KVH, DV)
+    gb = kb.shape[0]
+
+    # logits[h, t] = scale * q[h] · kb[t, h // g]
+    qg = q.reshape(kvh, g, -1)
+    logits = jnp.einsum("khd,tkd->kht", qg, kb).reshape(h, gb) * scale
+    # mask padded entries (idx < 0) — positions beyond the valid count
+    col = jax.lax.broadcasted_iota(jnp.int32, (1, gb), 1)[0] + j * gb
+    valid = jnp.zeros((gb,), bool)
+    for t in range(gb):                                   # gb is small & static
+        valid = valid.at[t].set(idx_ref[b, jnp.minimum(col[t], kk - 1)] >= 0)
+    valid = valid & (col < kk)
+    logits = jnp.where(valid[None, :], logits, -jnp.inf)
+
+    m_prev = m_scr[...]                                   # (H, 1)
+    l_prev = l_scr[...]
+    m_new = jnp.maximum(m_prev, jnp.max(logits, axis=-1, keepdims=True))
+    # guard: all -inf so far -> exp(-inf - -inf); shift by finite max
+    m_safe = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+    alpha = jnp.where(jnp.isfinite(m_prev), jnp.exp(m_prev - m_safe), 0.0)
+    p = jnp.exp(jnp.where(jnp.isfinite(logits), logits - m_safe, -jnp.inf))
+    p = jnp.where(jnp.isfinite(logits), p, 0.0)           # (H, GB)
+    l_scr[...] = l_prev * alpha + jnp.sum(p, axis=-1, keepdims=True)
+    pv = jnp.einsum("kgt,tkd->kgd", p.reshape(kvh, g, gb), vb).reshape(h, dv)
+    acc_scr[...] = acc_scr[...] * alpha + pv
+    m_scr[...] = m_new
+
+    @pl.when(j == nsteps - 1)
+    def _():
+        l = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0] = (acc_scr[...] / l).astype(o_ref.dtype)
+
+
+def sparse_decode_attn_pallas(q: jnp.ndarray, kcache: jnp.ndarray,
+                              vcache: jnp.ndarray, idx: jnp.ndarray,
+                              *, scale: Optional[float] = None,
+                              gather_block: int = 8,
+                              gather_mode: str = "kernel",
+                              interpret: bool = True):
+    """q: (B,H,D); k/vcache: (B,N,KVH,D[v]); idx: (B,K) int32, -1-padded.
+
+    gather_mode:
+      "kernel"    — the BlockSpec index_map reads the scalar-prefetched
+                    Top-K index for every grid step: the DMA engine itself
+                    performs the gather (token-granular, gather_block=1).
+                    This is the production TPU form of the GPU's scattered
+                    __ldg loads.
+      "pregather" — XLA take_along_axis gathers once, the kernel streams
+                    contiguous (gather_block, KVH, D) tiles. Same HBM bytes;
+                    faster under interpret=True (fewer grid steps).
+
+    Returns (B, H, DV) f32 attention output over the selected tokens only.
+    """
+    b, h, d = q.shape
+    kvh = kcache.shape[2]
+    dv = vcache.shape[-1]
+    kk = idx.shape[-1]
+    gb = 1 if gather_mode == "kernel" else min(gather_block, kk)
+    assert kk % gb == 0, (kk, gb)
+    nsteps = kk // gb
+    scale = scale if scale is not None else 1.0 / (d ** 0.5)
+
+    idx_safe = jnp.where(idx >= 0, idx, 0).astype(jnp.int32)
+    idx_pref = idx.astype(jnp.int32)
+
+    kern = functools.partial(_attn_kernel, nsteps=nsteps, kk=kk, scale=scale,
+                             h=h, kvh=kvh, dv=dv)
+
+    if gather_mode == "kernel":
+        # the DMA gather: block row index = prefetched Top-K entry
+        kv_k_spec = pl.BlockSpec((1, 1, kvh, d),
+                                 lambda i, j, idx_ref: (i, jnp.maximum(idx_ref[i, j], 0), 0, 0))
+        kv_v_spec = pl.BlockSpec((1, 1, kvh, dv),
+                                 lambda i, j, idx_ref: (i, jnp.maximum(idx_ref[i, j], 0), 0, 0))
+        kv_in, vv_in = kcache, vcache
+    else:
+        kv_k_spec = pl.BlockSpec((1, gb, kvh, d), lambda i, j, idx_ref: (i, j, 0, 0))
+        kv_v_spec = pl.BlockSpec((1, gb, kvh, dv), lambda i, j, idx_ref: (i, j, 0, 0))
+        kv_in = jnp.take_along_axis(
+            kcache, idx_safe[:, :, None, None].repeat(kvh, 2).repeat(d, 3), axis=1)
+        vv_in = jnp.take_along_axis(
+            vcache, idx_safe[:, :, None, None].repeat(kvh, 2).repeat(dv, 3), axis=1)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(b, nsteps),
+        in_specs=[
+            pl.BlockSpec((1, h, d), lambda i, j, idx_ref: (i, 0, 0)),
+            kv_k_spec,
+            kv_v_spec,
+        ],
+        out_specs=pl.BlockSpec((1, h, dv), lambda i, j, idx_ref: (i, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((h, 1), jnp.float32),
+            pltpu.VMEM((h, 1), jnp.float32),
+            pltpu.VMEM((h, dv), jnp.float32),
+        ],
+    )
+
+    out_shape = jax.ShapeDtypeStruct((b, h, dv), jnp.float32)
+    return pl.pallas_call(kern, grid_spec=grid_spec, out_shape=out_shape,
+                          interpret=interpret)(idx_pref, q, kv_in, vv_in)

@@ -1,0 +1,279 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+Proves the distribution config is coherent without hardware: 512 host
+platform devices build the production mesh; ShapeDtypeStruct stand-ins
+lower with the real shardings; `.compile()` must succeed; memory/cost
+analysis + the partitioned HLO's collective schedule are dumped to JSON for
+EXPERIMENTS.md §Dry-run and the roofline tool.
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch llama3.2-1b \
+        --shape train_4k [--multi-pod] [--out out.json]
+"""
+
+import argparse
+import json
+import re
+import sys
+import time
+
+COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "f16": 2, "bf16": 2, "s64": 8, "u64": 8,
+                "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
+                "pred": 1, "f8e4m3fn": 1, "f8e5m2": 1}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _bytes_of_shape(text: str) -> int:
+    """Sum byte sizes of all shapes in an HLO result-type string."""
+    total = 0
+    for m in _SHAPE_RE.finditer(text):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+_WHILE_RE = re.compile(r"while\([^)]*\), condition=%?([\w.\-]+), body=%?([\w.\-]+)")
+_CONST_RE = re.compile(r"constant\((\d+)\)")
+
+
+def _split_computations(hlo_text: str):
+    """name -> list of body lines (top-level computations only)."""
+    comps = {}
+    cur = None
+    for line in hlo_text.splitlines():
+        if not line.startswith(" ") and "{" in line and ("->" in line or
+                                                         line.startswith("ENTRY")):
+            name = line.split(" ", 2)[1] if line.startswith("ENTRY") else \
+                line.split(" ", 1)[0]
+            cur = name.lstrip("%")
+            comps[cur] = []
+        elif line.startswith("}"):
+            cur = None
+        elif cur is not None:
+            comps[cur].append(line.strip())
+    return comps
+
+
+def parse_collectives(hlo_text: str) -> dict:
+    """Per-collective-op byte totals from the partitioned HLO.
+
+    Collectives inside while bodies (lax.scan over layers, etc.) execute once
+    per loop iteration: each body's contribution is scaled by the loop trip
+    count recovered from the largest integer constant in the loop condition
+    (exact for scan-lowered counted loops; data-dependent loops like GVR's
+    secant use their iteration *cap*, i.e. an upper bound).
+    """
+    comps = _split_computations(hlo_text)
+
+    def trip_of(cond_name: str) -> int:
+        consts = [int(m) for ln in comps.get(cond_name, ())
+                  for m in _CONST_RE.findall(ln)]
+        return max(consts) if consts else 1
+
+    def walk(comp_name: str, mult: int, out: dict, seen_stack=()):
+        if comp_name in seen_stack:       # defensive: no recursion in HLO
+            return
+        for ls in comps.get(comp_name, ()):
+            m = _WHILE_RE.search(ls)
+            if m:
+                cond, body = m.group(1), m.group(2)
+                walk(body, mult * trip_of(cond), out, seen_stack + (comp_name,))
+                continue
+            if "-done(" in ls:
+                continue
+            for c in COLLECTIVES:
+                if f" {c}(" in ls or f" {c}-start(" in ls:
+                    lhs = ls.split("=", 1)
+                    if len(lhs) != 2:
+                        continue
+                    type_str = lhs[1].split(f" {c}", 1)[0]
+                    out[c]["count"] += mult
+                    out[c]["bytes"] += mult * _bytes_of_shape(type_str)
+                    break
+
+    out = {c: {"count": 0, "bytes": 0} for c in COLLECTIVES}
+    entry = None
+    for line in hlo_text.splitlines():
+        if line.startswith("ENTRY"):
+            entry = line.split(" ", 2)[1].lstrip("%")
+            break
+    if entry is None or entry not in comps:
+        # fall back: flat scan over every line
+        walk_all = list(comps) or [None]
+        for name in comps:
+            walk(name, 1, out)
+    else:
+        walk(entry, 1, out)
+    out["total_bytes"] = sum(v["bytes"] for v in out.values()
+                             if isinstance(v, dict))
+    out["total_count"] = sum(v["count"] for v in out.values()
+                             if isinstance(v, dict))
+    return out
+
+
+def run_cell(arch: str, shape: str, multi_pod: bool, selector: str = None,
+             skip_hlo: bool = False) -> dict:
+    import jax
+    import jax.numpy as jnp
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    from repro.configs.registry import get_config
+    from repro.launch.mesh import make_production_mesh
+    from repro.launch.train import make_train_step, shardings_for
+    from repro.models.api import SHAPES, build_model, supported_shapes
+    from repro.optim import adamw
+    from repro.parallel.sharding import make_rules
+
+    t_start = time.time()
+    cfg = get_config(arch)
+    if selector:
+        import dataclasses
+        cfg = dataclasses.replace(cfg, dsa=dataclasses.replace(cfg.dsa,
+                                                               selector=selector))
+    model = build_model(cfg)
+    if shape not in supported_shapes(cfg):
+        return {"arch": arch, "shape": shape, "multi_pod": multi_pod,
+                "status": "skipped",
+                "reason": "shape inapplicable to family (DESIGN §Arch-applicability)"}
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_dev = len(mesh.devices.flatten())
+    scell = SHAPES[shape]
+    seq_sharded = bool(scell.get("seq_sharded"))
+    from repro.parallel.sharding import overrides_for
+    rules = make_rules(mesh, overrides=overrides_for(cfg, scell["kind"]))
+    to_sh = lambda tree: jax.tree.map(
+        lambda s: NamedSharding(mesh, s), tree,
+        is_leaf=lambda x: isinstance(x, P))
+
+    result = {"arch": arch, "shape": shape, "multi_pod": multi_pod,
+              "n_devices": n_dev, "kind": scell["kind"],
+              "params": cfg.param_count(),
+              "active_params": cfg.active_param_count()}
+
+    with mesh:
+        if scell["kind"] in ("train", "prefill"):
+            pshapes = jax.eval_shape(lambda: model.init_params(jax.random.PRNGKey(0)))
+            oshapes = jax.eval_shape(lambda: adamw.init(pshapes))
+            psh, osh = shardings_for(model, mesh, rules, pshapes, oshapes)
+            batch_specs = model.input_specs(shape)
+            bspec = {k: NamedSharding(mesh, rules.spec(
+                *(("batch",) + (None,) * (len(v.shape) - 1)), sizes=v.shape))
+                for k, v in batch_specs.items()}
+            if scell["kind"] == "train":
+                ocfg = adamw.AdamWConfig()
+                step = make_train_step(model, ocfg, mesh=mesh, rules=rules)
+                jitted = jax.jit(step,
+                                 in_shardings=(psh, osh, bspec),
+                                 out_shardings=(psh, osh, None),
+                                 donate_argnums=(0, 1))
+                lowered = jitted.lower(pshapes, adamw.OptState(
+                    m=pshapes and jax.tree.map(
+                        lambda s: jax.ShapeDtypeStruct(s.shape, jnp.float32), pshapes),
+                    v=jax.tree.map(
+                        lambda s: jax.ShapeDtypeStruct(s.shape, jnp.float32), pshapes),
+                    count=jax.ShapeDtypeStruct((), jnp.int32)), batch_specs)
+            else:  # prefill: forward logits (cache construction in decode cells)
+                def prefill(params, batch):
+                    kw = {}
+                    if "patch_embeds" in batch:
+                        kw["patch_embeds"] = batch["patch_embeds"]
+                    if "frames" in batch:
+                        kw["frames"] = batch["frames"]
+                    return model.forward_train(params, batch["tokens"],
+                                               mesh=mesh, rules=rules, **kw)
+                jitted = jax.jit(prefill, in_shardings=(psh, bspec),
+                                 out_shardings=None)
+                lowered = jitted.lower(pshapes, batch_specs)
+        else:  # decode
+            b, n = scell["global_batch"], scell["seq_len"]
+            pshapes = jax.eval_shape(lambda: model.init_params(jax.random.PRNGKey(0)))
+            pspecs = model.param_specs(rules)
+            psh = to_sh(pspecs)
+            sshapes = model.decode_state_specs(shape)
+            sspecs = model.state_specs(rules, batch=b, max_len=n,
+                                       seq_sharded=seq_sharded)
+            ssh = to_sh(sspecs)
+            tok_sh = NamedSharding(mesh, rules.spec("batch", sizes=(b,)))
+
+            def serve(params, state, tokens):
+                return model.serve_step(params, state, tokens, mesh=mesh,
+                                        rules=rules, seq_sharded=seq_sharded)
+
+            jitted = jax.jit(serve, in_shardings=(psh, ssh, tok_sh),
+                             out_shardings=(None, ssh), donate_argnums=(1,))
+            lowered = jitted.lower(pshapes, sshapes,
+                                   jax.ShapeDtypeStruct((b,), jnp.int32))
+
+        t_lower = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time()
+
+        mem = compiled.memory_analysis()
+        if mem is not None:
+            result["memory"] = {
+                k: int(getattr(mem, k))
+                for k in ("argument_size_in_bytes", "output_size_in_bytes",
+                          "temp_size_in_bytes", "generated_code_size_in_bytes")
+                if hasattr(mem, k)}
+            result["memory"]["per_device_total"] = sum(
+                v for k, v in result["memory"].items()
+                if k != "generated_code_size_in_bytes")
+        cost = compiled.cost_analysis()
+        if cost:
+            result["cost"] = {k: float(v) for k, v in cost.items()
+                              if isinstance(v, (int, float)) and (
+                                  "flops" in k or "bytes" in k or "utilization" not in k)}
+            result["flops_per_device"] = float(cost.get("flops", 0.0))
+            result["bytes_per_device"] = float(cost.get("bytes accessed", 0.0))
+        if not skip_hlo:
+            hlo = compiled.as_text()
+            result["collectives"] = parse_collectives(hlo)
+            result["hlo_lines"] = hlo.count("\n")
+        result["lower_s"] = round(t_lower - t_start, 1)
+        result["compile_s"] = round(t_compile - t_lower, 1)
+        result["status"] = "ok"
+    return result
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--selector", default=None)
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+    try:
+        res = run_cell(args.arch, args.shape, args.multi_pod,
+                       selector=args.selector)
+    except Exception as e:  # noqa: BLE001 — record the failure for the table
+        import traceback
+        res = {"arch": args.arch, "shape": args.shape,
+               "multi_pod": args.multi_pod, "status": "error",
+               "error": f"{type(e).__name__}: {e}",
+               "traceback": traceback.format_exc()[-4000:]}
+    js = json.dumps(res, indent=1)
+    if args.out:
+        with open(args.out, "w") as f:
+            f.write(js)
+    print(js if res.get("status") != "ok" else
+          json.dumps({k: v for k, v in res.items()
+                      if k not in ("traceback",)}, indent=1))
+    sys.exit(0 if res.get("status") in ("ok", "skipped") else 1)
+
+
+if __name__ == "__main__":
+    main()

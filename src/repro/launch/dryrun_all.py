@@ -1,0 +1,110 @@
+"""Driver: run every (arch × shape × mesh) dry-run cell in subprocesses.
+
+Each cell is its own process (jax device count is locked at first init) with
+a bounded pool. Results land in results/dryrun/<arch>__<shape>__<mesh>.json.
+
+    PYTHONPATH=src python -m repro.launch.dryrun_all [--jobs 3] [--multi-pod-only]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import subprocess
+import sys
+import time
+from concurrent.futures import ThreadPoolExecutor
+
+ARCH_SHAPES = None  # resolved lazily (registry import touches nothing global)
+
+
+def cells():
+    from repro.configs.registry import all_archs, get_config
+    from repro.models.api import supported_shapes
+    out = []
+    for arch in all_archs():
+        cfg = get_config(arch)
+        for shape in ["train_4k", "prefill_32k", "decode_32k", "long_500k"]:
+            out.append((arch, shape, shape in supported_shapes(cfg)))
+    return out
+
+
+def run_one(arch: str, shape: str, multi_pod: bool, outdir: str,
+            timeout: int = 3000) -> dict:
+    tag = f"{arch}__{shape}__{'pod2' if multi_pod else 'pod1'}"
+    out = os.path.join(outdir, tag + ".json")
+    if os.path.exists(out):
+        with open(out) as f:
+            d = json.load(f)
+        if d.get("status") in ("ok", "skipped"):
+            return d
+    cmd = [sys.executable, "-m", "repro.launch.dryrun", "--arch", arch,
+           "--shape", shape, "--out", out]
+    if multi_pod:
+        cmd.append("--multi-pod")
+    env = dict(os.environ)
+    env["PYTHONPATH"] = env.get("PYTHONPATH", "src")
+    t0 = time.time()
+    try:
+        subprocess.run(cmd, capture_output=True, timeout=timeout, env=env)
+    except subprocess.TimeoutExpired:
+        d = {"arch": arch, "shape": shape, "multi_pod": multi_pod,
+             "status": "timeout", "seconds": timeout}
+        with open(out, "w") as f:
+            json.dump(d, f)
+        return d
+    if os.path.exists(out):
+        with open(out) as f:
+            return json.load(f)
+    return {"arch": arch, "shape": shape, "multi_pod": multi_pod,
+            "status": "crashed", "seconds": time.time() - t0}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--jobs", type=int, default=3)
+    ap.add_argument("--outdir", default="results/dryrun")
+    ap.add_argument("--mesh", choices=["pod1", "pod2", "both"], default="both")
+    args = ap.parse_args()
+    os.makedirs(args.outdir, exist_ok=True)
+
+    work = []
+    for arch, shape, applicable in cells():
+        for mp in ([False, True] if args.mesh == "both" else
+                   [args.mesh == "pod2"]):
+            work.append((arch, shape, mp, applicable))
+
+    def job(w):
+        arch, shape, mp, applicable = w
+        tag = f"{arch}:{shape}:{'2pod' if mp else '1pod'}"
+        if not applicable:
+            out = os.path.join(args.outdir,
+                               f"{arch}__{shape}__{'pod2' if mp else 'pod1'}.json")
+            d = {"arch": arch, "shape": shape, "multi_pod": mp,
+                 "status": "skipped", "reason": "inapplicable (DESIGN §Arch-applicability)"}
+            with open(out, "w") as f:
+                json.dump(d, f)
+            print(f"[skip] {tag}", flush=True)
+            return d
+        t0 = time.time()
+        d = run_one(arch, shape, mp, args.outdir)
+        print(f"[{d.get('status','?'):7s}] {tag:45s} {time.time()-t0:6.0f}s "
+              f"{d.get('error','')[:90]}", flush=True)
+        return d
+
+    with ThreadPoolExecutor(max_workers=args.jobs) as ex:
+        results = list(ex.map(job, work))
+
+    ok = sum(1 for r in results if r.get("status") == "ok")
+    sk = sum(1 for r in results if r.get("status") == "skipped")
+    bad = [r for r in results if r.get("status") not in ("ok", "skipped")]
+    print(f"\n== dry-run sweep: {ok} ok, {sk} skipped, {len(bad)} failed ==")
+    for r in bad:
+        print(f"  FAIL {r['arch']}:{r['shape']}:{r.get('multi_pod')}: "
+              f"{r.get('status')} {r.get('error','')[:120]}")
+    sys.exit(1 if bad else 0)
+
+
+if __name__ == "__main__":
+    main()

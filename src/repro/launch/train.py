@@ -1,0 +1,98 @@
+"""Training entry point + the train_step the dry-run lowers.
+
+python -m repro.launch.train --arch llama3.2-1b --steps 50 --smoke
+"""
+
+from __future__ import annotations
+
+import argparse
+import functools
+import time
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.models.api import build_model
+from repro.optim import adamw
+from repro.parallel.sharding import make_rules
+
+
+def make_train_step(model, cfg_opt: adamw.AdamWConfig, mesh=None, rules=None):
+    """(params, opt_state, batch) -> (params, opt_state, metrics)."""
+
+    def train_step(params, opt_state, batch):
+        loss, grads = jax.value_and_grad(
+            lambda p: model.loss_fn(p, batch, mesh=mesh, rules=rules))(params)
+        params, opt_state, metrics = adamw.update(grads, opt_state, params,
+                                                  cfg_opt)
+        metrics["loss"] = loss
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def shardings_for(model, mesh, rules, params_shapes, opt_shapes):
+    pspecs = model.param_specs(rules)
+    ospecs = adamw.OptState(
+        m=adamw.zero1_specs(pspecs, rules, sizes_tree=params_shapes),
+        v=adamw.zero1_specs(pspecs, rules, sizes_tree=params_shapes),
+        count=P())
+    to_sh = lambda spec_tree: jax.tree.map(
+        lambda s: NamedSharding(mesh, s), spec_tree,
+        is_leaf=lambda x: isinstance(x, P))
+    return to_sh(pspecs), to_sh(ospecs)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--steps", type=int, default=20)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--smoke", action="store_true",
+                    help="use the reduced same-family config")
+    ap.add_argument("--checkpoint-dir", default=None)
+    ap.add_argument("--checkpoint-every", type=int, default=10)
+    ap.add_argument("--resume", action="store_true")
+    args = ap.parse_args()
+
+    from repro.configs.registry import get_config
+    from repro.data.pipeline import synthetic_stream
+    cfg = get_config(args.arch, smoke=args.smoke)
+    model = build_model(cfg)
+    ocfg = adamw.AdamWConfig(total_steps=max(args.steps, 10))
+
+    key = jax.random.PRNGKey(0)
+    params = model.init_params(key)
+    opt_state = adamw.init(params)
+    step0 = 0
+    if args.checkpoint_dir and args.resume:
+        from repro.checkpoint.checkpoint import restore_latest
+        restored = restore_latest(args.checkpoint_dir, (params, opt_state))
+        if restored is not None:
+            (params, opt_state), step0 = restored
+            print(f"resumed from step {step0}")
+
+    train_step = jax.jit(make_train_step(model, ocfg))
+    stream = synthetic_stream(vocab=cfg.vocab, batch=args.batch,
+                              seq=args.seq, seed=step0,
+                              family=cfg.family, cfg=cfg)
+    t0 = time.time()
+    for step in range(step0, args.steps):
+        batch = next(stream)
+        params, opt_state, metrics = train_step(params, opt_state, batch)
+        if step % 5 == 0 or step == args.steps - 1:
+            print(f"step {step:4d} loss {float(metrics['loss']):.4f} "
+                  f"gnorm {float(metrics['grad_norm']):.3f} "
+                  f"lr {float(metrics['lr']):.2e} "
+                  f"({time.time()-t0:.1f}s)")
+        if args.checkpoint_dir and (step + 1) % args.checkpoint_every == 0:
+            from repro.checkpoint.checkpoint import save
+            save(args.checkpoint_dir, (params, opt_state), step + 1)
+    print("done")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,104 @@
+"""Unified model API: family dispatch + shape-cell input specs."""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from . import encdec, hybrid, ssm, transformer
+
+_FAMILY_MODULES = {
+    "dense": transformer, "moe": transformer, "vlm": transformer,
+    "hybrid": hybrid, "ssm": ssm, "audio": encdec,
+}
+
+# the assigned shape cells (system-prompt table)
+SHAPES = {
+    "train_4k": dict(kind="train", seq_len=4096, global_batch=256),
+    "prefill_32k": dict(kind="prefill", seq_len=32768, global_batch=32),
+    "decode_32k": dict(kind="decode", seq_len=32768, global_batch=128),
+    "long_500k": dict(kind="decode", seq_len=524288, global_batch=1,
+                      seq_sharded=True),
+}
+
+
+@dataclasses.dataclass
+class Model:
+    cfg: ModelConfig
+    mod: Any
+
+    def init_params(self, key):
+        return self.mod.init_params(key, self.cfg)
+
+    def param_specs(self, rules):
+        return self.mod.param_specs(self.cfg, rules)
+
+    def loss_fn(self, params, batch, *, mesh=None, rules=None):
+        return self.mod.loss_fn(params, batch, self.cfg, mesh=mesh, rules=rules)
+
+    def forward_train(self, params, tokens, **kw):
+        return self.mod.forward_train(params, tokens, self.cfg, **kw)
+
+    def init_decode_state(self, batch, max_len, dtype=None):
+        return self.mod.init_decode_state(self.cfg, batch, max_len, dtype=dtype)
+
+    def state_specs(self, rules, *, batch, max_len, seq_sharded=False):
+        return self.mod.state_specs(self.cfg, rules, batch=batch,
+                                    max_len=max_len, seq_sharded=seq_sharded)
+
+    def serve_step(self, params, state, tokens, *, mesh=None, rules=None,
+                   seq_sharded: bool = False):
+        if self.cfg.family == "hybrid":
+            return self.mod.serve_step(params, state, tokens, self.cfg,
+                                       mesh=mesh, rules=rules,
+                                       seq_sharded=seq_sharded)
+        return self.mod.serve_step(params, state, tokens, self.cfg,
+                                   mesh=mesh, rules=rules)
+
+    # ---- dry-run stand-ins (ShapeDtypeStruct; no allocation) ------------
+    def input_specs(self, shape: str) -> Dict[str, Any]:
+        s = SHAPES[shape]
+        b, sl = s["global_batch"], s["seq_len"]
+        i32 = jnp.int32
+        if s["kind"] in ("train", "prefill"):
+            specs = {
+                "tokens": jax.ShapeDtypeStruct((b, sl), i32),
+                "targets": jax.ShapeDtypeStruct((b, sl), i32),
+            }
+            if self.cfg.family == "audio":
+                specs["frames"] = jax.ShapeDtypeStruct(
+                    (b, self.cfg.encoder_frames, self.cfg.d_model),
+                    jnp.dtype(self.cfg.dtype))
+            if self.cfg.num_patches:
+                specs["patch_embeds"] = jax.ShapeDtypeStruct(
+                    (b, self.cfg.num_patches, self.cfg.d_model),
+                    jnp.dtype(self.cfg.dtype))
+            return specs
+        # decode: one new token; the KV/state cache is part of the state specs
+        return {"tokens": jax.ShapeDtypeStruct((b,), i32)}
+
+    def decode_state_specs(self, shape: str):
+        s = SHAPES[shape]
+        assert s["kind"] == "decode"
+        return jax.tree.map(
+            lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype),
+            jax.eval_shape(lambda: self.init_decode_state(
+                s["global_batch"], s["seq_len"])))
+
+
+def build_model(cfg: ModelConfig) -> Model:
+    return Model(cfg=cfg, mod=_FAMILY_MODULES[cfg.family])
+
+
+def supported_shapes(cfg: ModelConfig) -> list:
+    """Which of the 4 assigned shape cells apply to this arch (DESIGN
+    §Arch-applicability): long_500k only for sub-quadratic families;
+    decode skipped for encoder-only archs (none assigned)."""
+    shapes = ["train_4k", "prefill_32k", "decode_32k"]
+    if cfg.family in ("ssm", "hybrid"):
+        shapes.append("long_500k")
+    return shapes

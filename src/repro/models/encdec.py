@@ -1,0 +1,308 @@
+"""Whisper-style encoder-decoder backbone (audio family).
+
+Per the assignment the conv/mel frontend is a STUB: the encoder consumes
+precomputed frame embeddings (B, frames, d_model) from input_specs(). The
+encoder is bidirectional self-attention; the decoder has causal self-attn
+(KV cache, DSA-eligible) + cross-attention over the fixed encoder output
+(N_enc = 1500: below any Top-K gate, so cross-attn stays exact — noted in
+DESIGN §Arch-applicability).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.parallel.sharding import MeshRules, constrain
+from repro.sparse import dsa as dsa_mod
+from .config import ModelConfig
+from .layers import (apply_rotary, blockwise_causal_attention, decode_attention,
+                     gelu_mlp, rms_norm)
+from .transformer import _dense, _norm_init, _write_row
+
+
+def _attn_init(key, cfg, dtype, cross=False):
+    d, hd = cfg.d_model, cfg.hd
+    ks = jax.random.split(key, 4)
+    return {
+        "wq": _dense(ks[0], (d, cfg.n_heads * hd), dtype),
+        "wk": _dense(ks[1], (d, cfg.n_kv_heads * hd), dtype),
+        "wv": _dense(ks[2], (d, cfg.n_kv_heads * hd), dtype),
+        "wo": _dense(ks[3], (cfg.n_heads * hd, d), dtype),
+    }
+
+
+def _mlp_init(key, cfg, dtype):
+    d, f = cfg.d_model, cfg.d_ff
+    k1, k2 = jax.random.split(key)
+    return {"w_up": _dense(k1, (d, f), dtype), "b_up": jnp.zeros((f,), jnp.float32),
+            "w_down": _dense(k2, (f, d), dtype, scale=f ** -0.5),
+            "b_down": jnp.zeros((d,), jnp.float32)}
+
+
+def _enc_layer_init(key, cfg, dtype):
+    ka, km = jax.random.split(key)
+    return {"ln1": _norm_init(cfg.d_model), "ln2": _norm_init(cfg.d_model),
+            "attn": _attn_init(ka, cfg, dtype), "mlp": _mlp_init(km, cfg, dtype)}
+
+
+def _dec_layer_init(key, cfg, dtype):
+    ka, kc, km, ki = jax.random.split(key, 4)
+    p = {"ln1": _norm_init(cfg.d_model), "ln2": _norm_init(cfg.d_model),
+         "ln3": _norm_init(cfg.d_model),
+         "self_attn": _attn_init(ka, cfg, dtype),
+         "cross_attn": _attn_init(kc, cfg, dtype),
+         "mlp": _mlp_init(km, cfg, dtype)}
+    if cfg.dsa.enabled:
+        p["indexer"] = dsa_mod.indexer_init(ki, cfg.d_model,
+                                            cfg.dsa.indexer_heads,
+                                            cfg.dsa.indexer_dim, dtype)
+    return p
+
+
+def init_params(key, cfg: ModelConfig) -> Dict[str, Any]:
+    dtype = jnp.dtype(cfg.dtype)
+    ke, kd, kemb, kh, kpe = jax.random.split(key, 5)
+    enc_l = cfg.encoder_layers or cfg.n_layers
+    return {
+        "embed": _dense(kemb, (cfg.vocab, cfg.d_model), dtype, scale=1.0),
+        "enc_pos": _dense(kpe, (cfg.encoder_frames, cfg.d_model), dtype, scale=0.02),
+        "encoder": jax.vmap(lambda k: _enc_layer_init(k, cfg, dtype))(
+            jax.random.split(ke, enc_l)),
+        "decoder": jax.vmap(lambda k: _dec_layer_init(k, cfg, dtype))(
+            jax.random.split(kd, cfg.n_layers)),
+        "enc_norm": _norm_init(cfg.d_model),
+        "final_norm": _norm_init(cfg.d_model),
+        "lm_head": _dense(kh, (cfg.d_model, cfg.vocab), dtype),
+    }
+
+
+def param_specs(cfg: ModelConfig, rules: MeshRules) -> Dict[str, Any]:
+    d, hd = cfg.d_model, cfg.hd
+    sp = rules.spec
+    attn = {"wq": sp("d_model", "heads", sizes=(d, cfg.n_heads * hd)),
+            "wk": sp("d_model", "kv_heads", sizes=(d, cfg.n_kv_heads * hd)),
+            "wv": sp("d_model", "kv_heads", sizes=(d, cfg.n_kv_heads * hd)),
+            "wo": sp("heads", "d_model", sizes=(cfg.n_heads * hd, d))}
+    mlp = {"w_up": sp("d_model", "d_ff", sizes=(d, cfg.d_ff)), "b_up": P(None),
+           "w_down": sp("d_ff", "d_model", sizes=(cfg.d_ff, d)), "b_down": P(None)}
+    enc = {"ln1": P(None), "ln2": P(None), "attn": attn, "mlp": mlp}
+    dec = {"ln1": P(None), "ln2": P(None), "ln3": P(None),
+           "self_attn": attn, "cross_attn": attn, "mlp": mlp}
+    if cfg.dsa.enabled:
+        dec["indexer"] = {"wq": P(None, None), "wk": P(None, None), "w": P(None)}
+    pre = lambda tree: jax.tree.map(lambda s: P(*((None,) + tuple(s))), tree,
+                                    is_leaf=lambda x: isinstance(x, P))
+    return {
+        "embed": sp("vocab", "d_model", sizes=(cfg.vocab, d)),
+        "enc_pos": P(None, None),
+        "encoder": pre(enc), "decoder": pre(dec),
+        "enc_norm": P(None), "final_norm": P(None),
+        "lm_head": sp("d_model", "vocab", sizes=(d, cfg.vocab)),
+    }
+
+
+def _self_attn(p, x, cfg, positions, causal=True):
+    b, s, _ = x.shape
+    hd = cfg.hd
+    q = (x @ p["wq"]).reshape(b, s, cfg.n_heads, hd)
+    k = (x @ p["wk"]).reshape(b, s, cfg.n_kv_heads, hd)
+    v = (x @ p["wv"]).reshape(b, s, cfg.n_kv_heads, hd)
+    if causal:
+        q = apply_rotary(q, positions, base=cfg.rope_base)
+        k = apply_rotary(k, positions, base=cfg.rope_base)
+        out = blockwise_causal_attention(q, k, v, scale=hd ** -0.5)
+    else:
+        logits = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32),
+                            k.astype(jnp.float32)) * hd ** -0.5
+        pmat = jax.nn.softmax(logits, axis=-1)
+        out = jnp.einsum("bhqk,bkhd->bqhd", pmat, v.astype(jnp.float32))
+    return (out.reshape(b, s, -1).astype(x.dtype)) @ p["wo"]
+
+
+def _cross_attn(p, x, enc_out, cfg):
+    b, s, _ = x.shape
+    hd = cfg.hd
+    se = enc_out.shape[1]
+    q = (x @ p["wq"]).reshape(b, s, cfg.n_heads, hd)
+    k = (enc_out @ p["wk"]).reshape(b, se, cfg.n_kv_heads, hd)
+    v = (enc_out @ p["wv"]).reshape(b, se, cfg.n_kv_heads, hd)
+    logits = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) * hd ** -0.5
+    pmat = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", pmat, v.astype(jnp.float32))
+    return (out.reshape(b, s, -1).astype(x.dtype)) @ p["wo"]
+
+
+def encode(params, frames, cfg: ModelConfig, *, rules=None):
+    """frames: (B, F, D) precomputed frame embeddings (stub frontend)."""
+    x = frames.astype(jnp.dtype(cfg.dtype)) + params["enc_pos"][None]
+    x = constrain(x, rules, "batch", "seq", "d_model")
+
+    def layer(x, p):
+        x = x + _self_attn(p["attn"], rms_norm(x, p["ln1"]), cfg, None,
+                           causal=False)
+        x = x + gelu_mlp(rms_norm(x, p["ln2"]), **p["mlp"])
+        x = constrain(x, rules, "batch", "seq", "d_model")
+        return x, None
+
+    x, _ = jax.lax.scan(layer, x, params["encoder"])
+    return rms_norm(x, params["enc_norm"])
+
+
+def forward_train(params, tokens, cfg: ModelConfig, *, frames=None, mesh=None,
+                  rules=None, patch_embeds=None, remat: bool = True):
+    b, s = tokens.shape
+    if frames is None:
+        frames = jnp.zeros((b, cfg.encoder_frames, cfg.d_model), cfg.dtype)
+    enc_out = encode(params, frames, cfg, rules=rules)
+    x = params["embed"][tokens]
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+
+    def layer(x, p):
+        x = x + _self_attn(p["self_attn"], rms_norm(x, p["ln1"]), cfg, positions)
+        x = x + _cross_attn(p["cross_attn"], rms_norm(x, p["ln2"]), enc_out, cfg)
+        x = x + gelu_mlp(rms_norm(x, p["ln3"]), **p["mlp"])
+        x = constrain(x, rules, "batch", "seq", "d_model")
+        return x, None
+
+    if remat:
+        layer = jax.checkpoint(layer, prevent_cse=False)
+    x, _ = jax.lax.scan(layer, x, params["decoder"])
+    x = rms_norm(x, params["final_norm"])
+    return constrain(x @ params["lm_head"], rules, "batch", "seq", "vocab")
+
+
+def loss_fn(params, batch, cfg: ModelConfig, *, mesh=None, rules=None):
+    logits = forward_train(params, batch["tokens"], cfg,
+                           frames=batch.get("frames"), mesh=mesh, rules=rules)
+    logits = logits.astype(jnp.float32)
+    logz = jax.scipy.special.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, batch["targets"][..., None], axis=-1)[..., 0]
+    mask = batch.get("mask", jnp.ones_like(batch["targets"], jnp.float32))
+    return jnp.sum((logz - gold) * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+
+
+def init_decode_state(cfg: ModelConfig, batch: int, max_len: int, dtype=None):
+    dtype = dtype or jnp.dtype(cfg.dtype)
+    l, hd = cfg.n_layers, cfg.hd
+    state = {
+        "k": jnp.zeros((l, batch, max_len, cfg.n_kv_heads, hd), dtype),
+        "v": jnp.zeros((l, batch, max_len, cfg.n_kv_heads, hd), dtype),
+        # precomputed cross K/V over the fixed encoder output
+        "ck": jnp.zeros((l, batch, cfg.encoder_frames, cfg.n_kv_heads, hd), dtype),
+        "cv": jnp.zeros((l, batch, cfg.encoder_frames, cfg.n_kv_heads, hd), dtype),
+        "length": jnp.zeros((batch,), jnp.int32),
+    }
+    if cfg.dsa.enabled:
+        kk = min(cfg.dsa.k, max_len)
+        state["idx_k"] = jnp.zeros((l, batch, max_len, cfg.dsa.indexer_dim), dtype)
+        base = jnp.linspace(0, max(max_len - 1, 1), kk).astype(jnp.int32)
+        state["prev_topk"] = jnp.broadcast_to(base[None, None], (l, batch, kk))
+    return state
+
+
+def state_specs(cfg: ModelConfig, rules: MeshRules, *, batch: int, max_len: int,
+                seq_sharded: bool = False):
+    l, hd = cfg.n_layers, cfg.hd
+    sp = rules.spec
+    seq_ax = "seq_shard" if seq_sharded else None
+    specs = {
+        "k": sp(None, "batch", seq_ax, "kv_heads", None,
+                sizes=(l, batch, max_len, cfg.n_kv_heads, hd)),
+        "v": sp(None, "batch", seq_ax, "kv_heads", None,
+                sizes=(l, batch, max_len, cfg.n_kv_heads, hd)),
+        "ck": sp(None, "batch", None, "kv_heads", None,
+                 sizes=(l, batch, cfg.encoder_frames, cfg.n_kv_heads, hd)),
+        "cv": sp(None, "batch", None, "kv_heads", None,
+                 sizes=(l, batch, cfg.encoder_frames, cfg.n_kv_heads, hd)),
+        "length": P(None),
+    }
+    if cfg.dsa.enabled:
+        specs["idx_k"] = sp(None, "batch", seq_ax, None,
+                            sizes=(l, batch, max_len, cfg.dsa.indexer_dim))
+        specs["prev_topk"] = sp(None, "batch", None,
+                                sizes=(l, batch, min(cfg.dsa.k, max_len)))
+    return specs
+
+
+def serve_step(params, state, tokens, cfg: ModelConfig, *, mesh=None, rules=None):
+    b = tokens.shape[0]
+    hd = cfg.hd
+    x = params["embed"][tokens]
+    new_len = state["length"] + 1
+    positions = state["length"]
+    n = state["k"].shape[2]
+    use_dsa = cfg.dsa.enabled and n > cfg.dsa.min_n
+    kk = state["prev_topk"].shape[-1] if cfg.dsa.enabled else 0
+
+    def layer(x, carry):
+        p = carry["p"]
+        carry = dict(carry)
+        carry["k"] = constrain(carry["k"], rules, "batch", None, None, None)
+        carry["v"] = constrain(carry["v"], rules, "batch", None, None, None)
+        if "idx_k" in carry:
+            carry["idx_k"] = constrain(carry["idx_k"], rules, "batch", None, None)
+        h = rms_norm(x, p["ln1"])
+        pa = p["self_attn"]
+        q = (h @ pa["wq"]).reshape(b, 1, cfg.n_heads, hd)
+        kn = (h @ pa["wk"]).reshape(b, 1, cfg.n_kv_heads, hd)
+        vn = (h @ pa["wv"]).reshape(b, 1, cfg.n_kv_heads, hd)[:, 0]
+        q = apply_rotary(q, positions[:, None], base=cfg.rope_base)[:, 0]
+        kn = apply_rotary(kn, positions[:, None], base=cfg.rope_base)[:, 0]
+        kn = constrain(kn, rules, "batch", None, None)
+        vn = constrain(vn, rules, "batch", None, None)
+        kc = _write_row(carry["k"], kn, positions)
+        vc = _write_row(carry["v"], vn, positions)
+        out = {"p": p, "k": kc, "v": vc}
+        if use_dsa:
+            ik = dsa_mod.indexer_k(p["indexer"], h, positions,
+                                   dim=cfg.dsa.indexer_dim, rope_base=cfg.rope_base)
+            ikc = _write_row(carry["idx_k"], ik, positions)
+            res = dsa_mod.dsa_decode(
+                q, kc, vc, p["indexer"], h, ikc, carry["prev_topk"], new_len,
+                k=kk, scale=hd ** -0.5, heads=cfg.dsa.indexer_heads,
+                dim=cfg.dsa.indexer_dim, rope_base=cfg.rope_base,
+                selector=cfg.dsa.selector, max_candidates=cfg.dsa.max_candidates,
+                gate_max_n=cfg.dsa.gate_max_n, min_n=cfg.dsa.min_n,
+                    rules=rules, mesh=mesh)
+            att = res.attn_out
+            out["idx_k"], out["prev_topk"] = ikc, res.topk_idx
+        else:
+            att = decode_attention(q, kc, vc, new_len, scale=hd ** -0.5,
+                                        rules=rules)
+            if cfg.dsa.enabled:
+                ik = dsa_mod.indexer_k(p["indexer"], h, positions,
+                                       dim=cfg.dsa.indexer_dim,
+                                       rope_base=cfg.rope_base)
+                out["idx_k"] = _write_row(carry["idx_k"], ik, positions)
+                out["prev_topk"] = carry["prev_topk"]
+        x = x + (att.reshape(b, -1).astype(x.dtype) @ pa["wo"])
+        # cross attention over the precomputed encoder K/V (exact: N_enc=1500)
+        pc = p["cross_attn"]
+        hq = rms_norm(x, p["ln2"])
+        qc = (hq @ pc["wq"]).reshape(b, cfg.n_heads, hd)
+        enc_len = jnp.full((b,), carry["ck"].shape[1], jnp.int32)
+        attc = decode_attention(qc, carry["ck"], carry["cv"], enc_len,
+                                scale=hd ** -0.5, rules=rules)
+        x = x + (attc.reshape(b, -1).astype(x.dtype) @ pc["wo"])
+        out["ck"], out["cv"] = carry["ck"], carry["cv"]
+        x = x + gelu_mlp(rms_norm(x, p["ln3"]), **p["mlp"])
+        return x, out
+
+    carry_in = {"p": params["decoder"], "k": state["k"], "v": state["v"],
+                "ck": state["ck"], "cv": state["cv"]}
+    if cfg.dsa.enabled:
+        carry_in["idx_k"] = state["idx_k"]
+        carry_in["prev_topk"] = state["prev_topk"]
+    x, outs = jax.lax.scan(layer, x, carry_in)
+    new_state = dict(state, k=outs["k"], v=outs["v"], length=new_len)
+    if cfg.dsa.enabled:
+        new_state["idx_k"] = outs["idx_k"]
+        new_state["prev_topk"] = outs["prev_topk"]
+    x = rms_norm(x, params["final_norm"])
+    logits = (x @ params["lm_head"]).astype(jnp.float32)
+    return constrain(logits, rules, "batch", "vocab"), new_state

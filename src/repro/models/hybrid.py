@@ -1,0 +1,463 @@
+"""Jamba-style hybrid: Mamba + attention (1:7 interleave) + MoE.
+
+jamba-1.5-large-398b: 72 layers = 9 superblocks of 8 (1 attention layer +
+7 Mamba layers); MoE (16 experts, top-2) on odd layers, dense FFN on even —
+this reproduces the published 398B-total / ~94B-active split. The scan runs
+over superblocks so HLO depth is O(1).
+
+DSA/GVR applies to the attention layers (1 per superblock): at 500K context
+the attention layers run the SP-DSA sequence-parallel path while Mamba
+carries O(1) recurrent state — this is the paper-representative long-context
+cell (DESIGN §Arch-applicability).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.parallel.sharding import MeshRules, constrain
+from repro.sparse import dsa as dsa_mod
+from repro.sparse.sp_dsa import make_sp_dsa
+from .config import ModelConfig
+from .layers import (apply_rotary, blockwise_causal_attention, decode_attention,
+                     moe_mlp_ep, rms_norm, swiglu_mlp)
+from .transformer import _dense, _norm_init, _write_row
+
+SB = 8  # superblock size: 1 attn + 7 mamba
+
+
+def _mamba_init(key, cfg: ModelConfig, dtype):
+    d = cfg.d_model
+    di = d * cfg.mamba_expand
+    ds = cfg.mamba_d_state
+    dtr = max(d // 16, 1)
+    ks = jax.random.split(key, 8)
+    return {
+        "ln": _norm_init(d),
+        "in_proj": _dense(ks[0], (d, 2 * di), dtype),
+        "conv_w": (jax.random.normal(ks[1], (cfg.mamba_d_conv, di)) * 0.1).astype(dtype),
+        "conv_b": jnp.zeros((di,), jnp.float32),
+        "x_proj": _dense(ks[2], (di, dtr + 2 * ds), dtype),
+        "dt_proj": _dense(ks[3], (dtr, di), dtype),
+        "dt_bias": jnp.zeros((di,), jnp.float32),
+        "a_log": jnp.log(jnp.broadcast_to(
+            jnp.arange(1, ds + 1, dtype=jnp.float32)[None], (di, ds))),
+        "d_skip": jnp.ones((di,), jnp.float32),
+        "out_proj": _dense(ks[4], (di, d), dtype, scale=di ** -0.5),
+    }
+
+
+def _attn_init(key, cfg: ModelConfig, dtype):
+    d, hd = cfg.d_model, cfg.hd
+    ks = jax.random.split(key, 6)
+    p = {
+        "ln": _norm_init(d),
+        "wq": _dense(ks[0], (d, cfg.n_heads * hd), dtype),
+        "wk": _dense(ks[1], (d, cfg.n_kv_heads * hd), dtype),
+        "wv": _dense(ks[2], (d, cfg.n_kv_heads * hd), dtype),
+        "wo": _dense(ks[3], (cfg.n_heads * hd, d), dtype),
+    }
+    if cfg.dsa.enabled:
+        p["indexer"] = dsa_mod.indexer_init(ks[4], d, cfg.dsa.indexer_heads,
+                                            cfg.dsa.indexer_dim, dtype)
+    return p
+
+
+def _ffn_dense_init(key, cfg, dtype):
+    d, f = cfg.d_model, cfg.d_ff
+    ks = jax.random.split(key, 3)
+    return {"ln": _norm_init(d),
+            "w_gate": _dense(ks[0], (d, f), dtype),
+            "w_up": _dense(ks[1], (d, f), dtype),
+            "w_down": _dense(ks[2], (f, d), dtype, scale=f ** -0.5)}
+
+
+def _ffn_moe_init(key, cfg, dtype):
+    d = cfg.d_model
+    e, f = cfg.moe.num_experts, cfg.moe.expert_d_ff
+    ks = jax.random.split(key, 4)
+    return {"ln": _norm_init(d),
+            "router": _dense(ks[0], (d, e), jnp.float32),
+            "w_gate": _dense(ks[1], (e, d, f), dtype),
+            "w_up": _dense(ks[2], (e, d, f), dtype),
+            "w_down": _dense(ks[3], (e, f, d), dtype, scale=f ** -0.5)}
+
+
+def _superblock_init(key, cfg: ModelConfig, dtype):
+    ka, km, kd, ke = jax.random.split(key, 4)
+    return {
+        "attn": _attn_init(ka, cfg, dtype),
+        "mamba": jax.vmap(lambda k: _mamba_init(k, cfg, dtype))(
+            jax.random.split(km, SB - 1)),
+        "dense": jax.vmap(lambda k: _ffn_dense_init(k, cfg, dtype))(
+            jax.random.split(kd, SB // 2)),
+        "moe": jax.vmap(lambda k: _ffn_moe_init(k, cfg, dtype))(
+            jax.random.split(ke, SB // 2)),
+    }
+
+
+def init_params(key, cfg: ModelConfig) -> Dict[str, Any]:
+    assert cfg.n_layers % SB == 0, "jamba layers must be a multiple of 8"
+    dtype = jnp.dtype(cfg.dtype)
+    nsb = cfg.n_layers // SB
+    k_emb, k_sb, k_head = jax.random.split(key, 3)
+    return {
+        "embed": _dense(k_emb, (cfg.vocab, cfg.d_model), dtype, scale=1.0),
+        "blocks": jax.vmap(lambda k: _superblock_init(k, cfg, dtype))(
+            jax.random.split(k_sb, nsb)),
+        "final_norm": _norm_init(cfg.d_model),
+        "lm_head": _dense(k_head, (cfg.d_model, cfg.vocab), dtype),
+    }
+
+
+def param_specs(cfg: ModelConfig, rules: MeshRules) -> Dict[str, Any]:
+    d, hd = cfg.d_model, cfg.hd
+    di = d * cfg.mamba_expand
+    e, f = cfg.moe.num_experts, cfg.moe.expert_d_ff
+    sp = rules.spec
+    attn = {
+        "ln": P(None),
+        "wq": sp("d_model", "heads", sizes=(d, cfg.n_heads * hd)),
+        "wk": sp("d_model", "kv_heads", sizes=(d, cfg.n_kv_heads * hd)),
+        "wv": sp("d_model", "kv_heads", sizes=(d, cfg.n_kv_heads * hd)),
+        "wo": sp("heads", "d_model", sizes=(cfg.n_heads * hd, d)),
+    }
+    if cfg.dsa.enabled:
+        attn["indexer"] = {"wq": P(None, None), "wk": P(None, None), "w": P(None)}
+    mamba = {
+        "ln": P(None),
+        "in_proj": sp("d_model", "d_ff", sizes=(d, 2 * di)),
+        "conv_w": P(None, None), "conv_b": P(None),
+        "x_proj": P(None, None),
+        "dt_proj": P(None, None), "dt_bias": P(None),
+        "a_log": P(None, None), "d_skip": P(None),
+        "out_proj": sp("d_ff", "d_model", sizes=(di, d)),
+    }
+    dense = {"ln": P(None),
+             "w_gate": sp("d_model", "d_ff", sizes=(d, cfg.d_ff)),
+             "w_up": sp("d_model", "d_ff", sizes=(d, cfg.d_ff)),
+             "w_down": sp("d_ff", "d_model", sizes=(cfg.d_ff, d))}
+    moe = {"ln": P(None), "router": P(None, None),
+           "w_gate": sp("experts", None, None, sizes=(e, d, f)),
+           "w_up": sp("experts", None, None, sizes=(e, d, f)),
+           "w_down": sp("experts", None, None, sizes=(e, f, d))}
+    blocks = {"attn": attn,
+              "mamba": jax.tree.map(lambda s: P(*((None,) + tuple(s))), mamba,
+                                    is_leaf=lambda x: isinstance(x, P)),
+              "dense": jax.tree.map(lambda s: P(*((None,) + tuple(s))), dense,
+                                    is_leaf=lambda x: isinstance(x, P)),
+              "moe": jax.tree.map(lambda s: P(*((None,) + tuple(s))), moe,
+                                  is_leaf=lambda x: isinstance(x, P))}
+    blocks = jax.tree.map(lambda s: P(*((None,) + tuple(s))), blocks,
+                          is_leaf=lambda x: isinstance(x, P))
+    return {
+        "embed": sp("vocab", "d_model", sizes=(cfg.vocab, d)),
+        "blocks": blocks,
+        "final_norm": P(None),
+        "lm_head": sp("d_model", "vocab", sizes=(d, cfg.vocab)),
+    }
+
+
+# --------------------------------------------------------------------------
+# Mamba compute
+# --------------------------------------------------------------------------
+
+def _mamba_train(p, x, cfg: ModelConfig):
+    """Selective SSM over (B, S, D)."""
+    b, s, d = x.shape
+    di = d * cfg.mamba_expand
+    ds = cfg.mamba_d_state
+    dtr = max(d // 16, 1)
+    xz = x @ p["in_proj"]
+    x1, z = xz[..., :di], xz[..., di:]
+    # causal depthwise conv (window d_conv)
+    dc = cfg.mamba_d_conv
+    xp = jnp.pad(x1, ((0, 0), (dc - 1, 0), (0, 0)))
+    x1 = sum(xp[:, i:i + s] * p["conv_w"][i][None, None] for i in range(dc))
+    x1 = jax.nn.silu(x1 + p["conv_b"])
+    proj = x1 @ p["x_proj"]
+    dt = jax.nn.softplus(proj[..., :dtr] @ p["dt_proj"] + p["dt_bias"])  # (B,S,di)
+    bmat = proj[..., dtr:dtr + ds].astype(jnp.float32)                   # (B,S,ds)
+    cmat = proj[..., dtr + ds:].astype(jnp.float32)
+    a = -jnp.exp(p["a_log"])                                             # (di,ds)
+
+    def step(h, xs):
+        xt, dtt, bt, ct = xs
+        ad = jnp.exp(dtt[..., None] * a[None])                            # (B,di,ds)
+        h = ad * h + (dtt * xt)[..., None] * bt[:, None, :]
+        y = jnp.einsum("bds,bs->bd", h, ct)
+        return h, y
+
+    h0 = jnp.zeros((b, di, ds), jnp.float32)
+    _, ys = jax.lax.scan(step, h0,
+                         (x1.swapaxes(0, 1).astype(jnp.float32),
+                          dt.swapaxes(0, 1).astype(jnp.float32),
+                          bmat.swapaxes(0, 1), cmat.swapaxes(0, 1)))
+    y = ys.swapaxes(0, 1) + p["d_skip"] * x1.astype(jnp.float32)
+    y = y.astype(x.dtype) * jax.nn.silu(z)
+    return y @ p["out_proj"]
+
+
+def _mamba_step(p, x, h, conv_cache, cfg: ModelConfig):
+    """One decode token. x: (B, D); h: (B, di, ds); conv_cache: (B, dc-1, di)."""
+    b, d = x.shape
+    di = d * cfg.mamba_expand
+    ds = cfg.mamba_d_state
+    dtr = max(d // 16, 1)
+    dc = cfg.mamba_d_conv
+    xz = x @ p["in_proj"]
+    x1, z = xz[..., :di], xz[..., di:]
+    window = jnp.concatenate([conv_cache, x1[:, None]], axis=1)  # (B, dc, di)
+    xc = jnp.einsum("bcd,cd->bd", window.astype(jnp.float32),
+                    p["conv_w"].astype(jnp.float32))
+    xc = jax.nn.silu(xc + p["conv_b"]).astype(x.dtype)
+    proj = xc @ p["x_proj"]
+    dt = jax.nn.softplus(proj[..., :dtr] @ p["dt_proj"] + p["dt_bias"])
+    bmat = proj[..., dtr:dtr + ds].astype(jnp.float32)
+    cmat = proj[..., dtr + ds:].astype(jnp.float32)
+    a = -jnp.exp(p["a_log"])
+    ad = jnp.exp(dt.astype(jnp.float32)[..., None] * a[None])
+    h = ad * h + (dt.astype(jnp.float32) * xc.astype(jnp.float32))[..., None] * bmat[:, None, :]
+    y = jnp.einsum("bds,bs->bd", h, cmat) + p["d_skip"] * xc.astype(jnp.float32)
+    y = y.astype(x.dtype) * jax.nn.silu(z)
+    return y @ p["out_proj"], h, window[:, 1:]
+
+
+def _ffn(p, x, cfg, mesh, is_moe):
+    if is_moe:
+        return moe_mlp_ep(x, p["router"], p["w_gate"], p["w_up"], p["w_down"],
+                          top_k=cfg.moe.top_k,
+                          capacity_factor=cfg.moe.capacity_factor, mesh=mesh)
+    return swiglu_mlp(x, p["w_gate"], p["w_up"], p["w_down"])
+
+
+# --------------------------------------------------------------------------
+# Train
+# --------------------------------------------------------------------------
+
+def forward_train(params, tokens, cfg: ModelConfig, *, mesh=None, rules=None,
+                  patch_embeds=None, remat: bool = True):
+    b, s = tokens.shape
+    x = params["embed"][tokens]
+    x = constrain(x, rules, "batch", "seq", "d_model")
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+    hd = cfg.hd
+
+    def superblock(x, p):
+        # layer 0: attention + dense FFN 0
+        pa = p["attn"]
+        h = rms_norm(x, pa["ln"])
+        q = (h @ pa["wq"]).reshape(b, s, cfg.n_heads, hd)
+        kk = (h @ pa["wk"]).reshape(b, s, cfg.n_kv_heads, hd)
+        v = (h @ pa["wv"]).reshape(b, s, cfg.n_kv_heads, hd)
+        q = apply_rotary(q, positions, base=cfg.rope_base)
+        kk = apply_rotary(kk, positions, base=cfg.rope_base)
+        att = blockwise_causal_attention(q, kk, v, scale=hd ** -0.5)
+        x = x + (att.reshape(b, s, -1).astype(x.dtype) @ pa["wo"])
+        x = constrain(x, rules, "batch", "seq", "d_model")
+
+        for i in range(SB):
+            if i > 0:
+                pm = jax.tree.map(lambda a: a[i - 1], p["mamba"])
+                x = x + _mamba_train(pm, rms_norm(x, pm["ln"]), cfg)
+                x = constrain(x, rules, "batch", "seq", "d_model")
+            if i % 2 == 1:
+                pf = jax.tree.map(lambda a: a[i // 2], p["moe"])
+                x = x + _ffn(pf, rms_norm(x, pf["ln"]), cfg, mesh, True)
+            else:
+                pf = jax.tree.map(lambda a: a[i // 2], p["dense"])
+                x = x + _ffn(pf, rms_norm(x, pf["ln"]), cfg, mesh, False)
+            x = constrain(x, rules, "batch", "seq", "d_model")
+        return x, None
+
+    if remat:
+        superblock = jax.checkpoint(superblock, prevent_cse=False)
+    x, _ = jax.lax.scan(superblock, x, params["blocks"])
+    x = rms_norm(x, params["final_norm"])
+    logits = x @ params["lm_head"]
+    return constrain(logits, rules, "batch", "seq", "vocab")
+
+
+def loss_fn(params, batch, cfg: ModelConfig, *, mesh=None, rules=None):
+    logits = forward_train(params, batch["tokens"], cfg, mesh=mesh, rules=rules)
+    logits = logits.astype(jnp.float32)
+    logz = jax.scipy.special.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, batch["targets"][..., None], axis=-1)[..., 0]
+    mask = batch.get("mask", jnp.ones_like(batch["targets"], jnp.float32))
+    return jnp.sum((logz - gold) * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+
+
+# --------------------------------------------------------------------------
+# Decode
+# --------------------------------------------------------------------------
+
+def init_decode_state(cfg: ModelConfig, batch: int, max_len: int, dtype=None):
+    dtype = dtype or jnp.dtype(cfg.dtype)
+    nsb = cfg.n_layers // SB
+    d, hd = cfg.d_model, cfg.hd
+    di = d * cfg.mamba_expand
+    ds = cfg.mamba_d_state
+    state = {
+        "k": jnp.zeros((nsb, batch, max_len, cfg.n_kv_heads, hd), dtype),
+        "v": jnp.zeros((nsb, batch, max_len, cfg.n_kv_heads, hd), dtype),
+        "h": jnp.zeros((nsb, SB - 1, batch, di, ds), jnp.float32),
+        "conv": jnp.zeros((nsb, SB - 1, batch, cfg.mamba_d_conv - 1, di), dtype),
+        "length": jnp.zeros((batch,), jnp.int32),
+    }
+    if cfg.dsa.enabled:
+        kk = min(cfg.dsa.k, max_len)
+        state["idx_k"] = jnp.zeros((nsb, batch, max_len, cfg.dsa.indexer_dim), dtype)
+        base = jnp.linspace(0, max(max_len - 1, 1), kk).astype(jnp.int32)
+        state["prev_topk"] = jnp.broadcast_to(base[None, None], (nsb, batch, kk))
+    return state
+
+
+def state_specs(cfg: ModelConfig, rules: MeshRules, *, batch: int, max_len: int,
+                seq_sharded: bool = False):
+    nsb = cfg.n_layers // SB
+    d, hd = cfg.d_model, cfg.hd
+    di = d * cfg.mamba_expand
+    seq_ax = "seq_shard" if seq_sharded else None
+    sp = rules.spec
+    specs = {
+        "k": sp(None, "batch", seq_ax, "kv_heads", None,
+                sizes=(nsb, batch, max_len, cfg.n_kv_heads, hd)),
+        "v": sp(None, "batch", seq_ax, "kv_heads", None,
+                sizes=(nsb, batch, max_len, cfg.n_kv_heads, hd)),
+        "h": sp(None, None, "batch", "d_ff", None,
+                sizes=(nsb, SB - 1, batch, di, cfg.mamba_d_state)),
+        "conv": sp(None, None, "batch", None, "d_ff",
+                   sizes=(nsb, SB - 1, batch, cfg.mamba_d_conv - 1, di)),
+        "length": P(None),
+    }
+    if cfg.dsa.enabled:
+        specs["idx_k"] = sp(None, "batch", seq_ax, None,
+                            sizes=(nsb, batch, max_len, cfg.dsa.indexer_dim))
+        specs["prev_topk"] = sp(None, "batch", None,
+                                sizes=(nsb, batch, min(cfg.dsa.k, max_len)))
+    return specs
+
+
+def serve_step(params, state, tokens, cfg: ModelConfig, *, mesh=None,
+               rules: Optional[MeshRules] = None, seq_sharded: bool = False):
+    b = tokens.shape[0]
+    d, hd = cfg.d_model, cfg.hd
+    x = params["embed"][tokens]
+    x = constrain(x, rules, "batch", "d_model")
+    new_len = state["length"] + 1
+    positions = state["length"]
+    n = state["k"].shape[2]
+    use_dsa = cfg.dsa.enabled and n > cfg.dsa.min_n
+    use_sp = use_dsa and seq_sharded and mesh is not None
+    kk = state["prev_topk"].shape[-1] if cfg.dsa.enabled else 0
+
+    sp_layer = None
+    if use_sp:
+        m_ext = mesh.shape.get("model", 1)
+        # head-sharding the SP attention needs each shard's head slice to
+        # cover whole KV groups
+        ok_heads = (cfg.n_heads % m_ext == 0
+                    and (cfg.n_heads // m_ext) % cfg.n_kv_heads == 0)
+        sp_layer = make_sp_dsa(mesh, k=kk, scale=hd ** -0.5,
+                               heads=cfg.dsa.indexer_heads,
+                               dim=cfg.dsa.indexer_dim, rope_base=cfg.rope_base,
+                               shard_heads=ok_heads)
+
+    def superblock(x, carry):
+        p = carry["p"]
+        pa = p["attn"]
+        # pin cache layouts at loop entry (see transformer.serve_step);
+        # in the sequence-parallel path the seq dim stays sharded
+        seq_ax = "seq_shard" if use_sp else None
+        carry = dict(carry)
+        carry["k"] = constrain(carry["k"], rules, "batch", seq_ax, None, None)
+        carry["v"] = constrain(carry["v"], rules, "batch", seq_ax, None, None)
+        if "idx_k" in carry:
+            carry["idx_k"] = constrain(carry["idx_k"], rules, "batch", seq_ax, None)
+        h = rms_norm(x, pa["ln"])
+        q = (h @ pa["wq"]).reshape(b, 1, cfg.n_heads, hd)
+        kn = (h @ pa["wk"]).reshape(b, 1, cfg.n_kv_heads, hd)
+        vn = (h @ pa["wv"]).reshape(b, 1, cfg.n_kv_heads, hd)
+        q = apply_rotary(q, positions[:, None], base=cfg.rope_base)[:, 0]
+        kn = apply_rotary(kn, positions[:, None], base=cfg.rope_base)[:, 0]
+        vn = vn[:, 0]
+        kn = constrain(kn, rules, "batch", None, None)
+        vn = constrain(vn, rules, "batch", None, None)
+        out = {"p": p}
+        if use_sp:
+            ik = dsa_mod.indexer_k(pa["indexer"], h, positions,
+                                   dim=cfg.dsa.indexer_dim, rope_base=cfg.rope_base)
+            res = sp_layer(q, carry["k"], carry["v"], carry["idx_k"], h,
+                           pa["indexer"], carry["prev_topk"], new_len,
+                           kn, vn, ik)
+            att, kc, vc = res.attn_out, res.new_k, res.new_v
+            out["idx_k"], out["prev_topk"] = res.new_ik, res.new_topk
+        else:
+            kc = _write_row(carry["k"], kn, positions)
+            vc = _write_row(carry["v"], vn, positions)
+            if use_dsa:
+                ik = dsa_mod.indexer_k(pa["indexer"], h, positions,
+                                       dim=cfg.dsa.indexer_dim,
+                                       rope_base=cfg.rope_base)
+                ikc = _write_row(carry["idx_k"], ik, positions)
+                res = dsa_mod.dsa_decode(
+                    q, kc, vc, pa["indexer"], h, ikc, carry["prev_topk"],
+                    new_len, k=kk, scale=hd ** -0.5,
+                    heads=cfg.dsa.indexer_heads, dim=cfg.dsa.indexer_dim,
+                    rope_base=cfg.rope_base, selector=cfg.dsa.selector,
+                    max_candidates=cfg.dsa.max_candidates,
+                    gate_max_n=cfg.dsa.gate_max_n, min_n=cfg.dsa.min_n,
+                    rules=rules, mesh=mesh)
+                att = res.attn_out
+                out["idx_k"], out["prev_topk"] = ikc, res.topk_idx
+            else:
+                att = decode_attention(q, kc, vc, new_len, scale=hd ** -0.5,
+                                        rules=rules)
+                if cfg.dsa.enabled:
+                    ik = dsa_mod.indexer_k(pa["indexer"], h, positions,
+                                           dim=cfg.dsa.indexer_dim,
+                                           rope_base=cfg.rope_base)
+                    out["idx_k"] = _write_row(carry["idx_k"], ik, positions)
+                    out["prev_topk"] = carry["prev_topk"]
+        out["k"], out["v"] = kc, vc
+        x = x + (att.reshape(b, -1).astype(x.dtype) @ pa["wo"])
+
+        hs, convs = [], []
+        for i in range(SB):
+            if i > 0:
+                pm = jax.tree.map(lambda a: a[i - 1], p["mamba"])
+                y, hn, cn = _mamba_step(pm, rms_norm(x, pm["ln"]),
+                                        carry["h"][i - 1], carry["conv"][i - 1], cfg)
+                x = x + y
+                hs.append(hn)
+                convs.append(cn)
+            if i % 2 == 1:
+                pf = jax.tree.map(lambda a: a[i // 2], p["moe"])
+                x = x + _ffn(pf, rms_norm(x, pf["ln"])[:, None], cfg, mesh, True)[:, 0]
+            else:
+                pf = jax.tree.map(lambda a: a[i // 2], p["dense"])
+                x = x + _ffn(pf, rms_norm(x, pf["ln"]), cfg, mesh, False)
+        out["h"] = jnp.stack(hs)
+        out["conv"] = jnp.stack(convs)
+        x = constrain(x, rules, "batch", "d_model")
+        return x, out
+
+    carry_in = {"p": params["blocks"], "k": state["k"], "v": state["v"],
+                "h": state["h"], "conv": state["conv"]}
+    if cfg.dsa.enabled:
+        carry_in["idx_k"] = state["idx_k"]
+        carry_in["prev_topk"] = state["prev_topk"]
+    x, outs = jax.lax.scan(superblock, x, carry_in)
+
+    new_state = dict(state, k=outs["k"], v=outs["v"], h=outs["h"],
+                     conv=outs["conv"], length=new_len)
+    if cfg.dsa.enabled:
+        new_state["idx_k"] = outs["idx_k"]
+        new_state["prev_topk"] = outs["prev_topk"]
+    x = rms_norm(x, params["final_norm"])
+    logits = (x @ params["lm_head"]).astype(jnp.float32)
+    return constrain(logits, rules, "batch", "vocab"), new_state

@@ -1,0 +1,261 @@
+"""RWKV6 'Finch' — attention-free LM with data-dependent decay.
+
+Arch per the paper (arXiv:2404.05892): per layer a time-mix block (the WKV
+recurrence with per-channel data-dependent decay w_t = exp(-exp(w0 + LoRA(x))))
+and a channel-mix block (token-shifted squared-ReLU FFN).
+
+DSA/GVR applicability: NONE — there is no KV cache and no Top-K selection in
+an attention-free model (DESIGN.md §Arch-applicability). long_500k runs here
+because decode state is O(1) in context length.
+
+Train path scans time inside the layer scan (compact HLO for the 512-chip
+dry-run); production would use the chunkwise-parallel form — the recurrence
+FLOPs are identical, so cost_analysis is unaffected.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.parallel.sharding import MeshRules, constrain
+from .config import ModelConfig
+from .layers import rms_norm
+from .transformer import _dense, _norm_init
+
+LORA_R = 32
+
+
+def init_layer_params(key, cfg: ModelConfig, dtype) -> Dict[str, Any]:
+    d = cfg.d_model
+    hd = cfg.rwkv_head_dim
+    h = d // hd
+    ks = jax.random.split(key, 14)
+    return {
+        "ln1": _norm_init(d), "ln2": _norm_init(d),
+        # time-mix
+        "mix_r": jnp.full((d,), 0.5, jnp.float32),
+        "mix_k": jnp.full((d,), 0.5, jnp.float32),
+        "mix_v": jnp.full((d,), 0.5, jnp.float32),
+        "mix_w": jnp.full((d,), 0.5, jnp.float32),
+        "mix_g": jnp.full((d,), 0.5, jnp.float32),
+        "w0": jnp.zeros((d,), jnp.float32) - 0.5,
+        "w_a": _dense(ks[0], (d, LORA_R), dtype),
+        "w_b": _dense(ks[1], (LORA_R, d), dtype),
+        "u": jnp.zeros((h, hd), jnp.float32),          # bonus
+        "wr": _dense(ks[2], (d, d), dtype),
+        "wk": _dense(ks[3], (d, d), dtype),
+        "wv": _dense(ks[4], (d, d), dtype),
+        "wg": _dense(ks[5], (d, d), dtype),
+        "wo": _dense(ks[6], (d, d), dtype),
+        "ln_x": _norm_init(d),
+        # channel-mix
+        "mix_ck": jnp.full((d,), 0.5, jnp.float32),
+        "mix_cr": jnp.full((d,), 0.5, jnp.float32),
+        "ck": _dense(ks[7], (d, cfg.d_ff), dtype),
+        "cv": _dense(ks[8], (cfg.d_ff, d), dtype, scale=cfg.d_ff ** -0.5),
+        "cr": _dense(ks[9], (d, d), dtype),
+    }
+
+
+def init_params(key, cfg: ModelConfig) -> Dict[str, Any]:
+    dtype = jnp.dtype(cfg.dtype)
+    k_emb, k_layers, k_head = jax.random.split(key, 3)
+    lk = jax.random.split(k_layers, cfg.n_layers)
+    return {
+        "embed": _dense(k_emb, (cfg.vocab, cfg.d_model), dtype, scale=1.0),
+        "layers": jax.vmap(lambda k: init_layer_params(k, cfg, dtype))(lk),
+        "final_norm": _norm_init(cfg.d_model),
+        "lm_head": _dense(k_head, (cfg.d_model, cfg.vocab), dtype),
+    }
+
+
+def param_specs(cfg: ModelConfig, rules: MeshRules) -> Dict[str, Any]:
+    d = cfg.d_model
+    sp = rules.spec
+    vec = P(None)
+    lp = {
+        "ln1": vec, "ln2": vec, "ln_x": vec,
+        "mix_r": vec, "mix_k": vec, "mix_v": vec, "mix_w": vec, "mix_g": vec,
+        "w0": vec, "u": P(None, None),
+        "w_a": P(None, None), "w_b": P(None, None),
+        "wr": sp("d_model", "d_ff", sizes=(d, d)),
+        "wk": sp("d_model", "d_ff", sizes=(d, d)),
+        "wv": sp("d_model", "d_ff", sizes=(d, d)),
+        "wg": sp("d_model", "d_ff", sizes=(d, d)),
+        "wo": sp("d_ff", "d_model", sizes=(d, d)),
+        "mix_ck": vec, "mix_cr": vec,
+        "ck": sp("d_model", "d_ff", sizes=(d, cfg.d_ff)),
+        "cv": sp("d_ff", "d_model", sizes=(cfg.d_ff, d)),
+        "cr": sp("d_model", None, sizes=(d, d)),
+    }
+    lp = jax.tree.map(lambda s: P(*((None,) + tuple(s))), lp,
+                      is_leaf=lambda x: isinstance(x, P))
+    return {
+        "embed": sp("vocab", "d_model", sizes=(cfg.vocab, d)),
+        "layers": lp,
+        "final_norm": P(None),
+        "lm_head": sp("d_model", "vocab", sizes=(d, cfg.vocab)),
+    }
+
+
+def _time_mix_step(p, x, x_prev, s, cfg: ModelConfig):
+    """One token of the WKV6 recurrence. x: (B, D); s: (B, H, hd, hd)."""
+    d = cfg.d_model
+    hd = cfg.rwkv_head_dim
+    h = d // hd
+    b = x.shape[0]
+    xm_r = x * p["mix_r"] + x_prev * (1 - p["mix_r"])
+    xm_k = x * p["mix_k"] + x_prev * (1 - p["mix_k"])
+    xm_v = x * p["mix_v"] + x_prev * (1 - p["mix_v"])
+    xm_w = x * p["mix_w"] + x_prev * (1 - p["mix_w"])
+    xm_g = x * p["mix_g"] + x_prev * (1 - p["mix_g"])
+    r = (xm_r.astype(p["wr"].dtype) @ p["wr"]).reshape(b, h, hd)
+    k = (xm_k.astype(p["wk"].dtype) @ p["wk"]).reshape(b, h, hd)
+    v = (xm_v.astype(p["wv"].dtype) @ p["wv"]).reshape(b, h, hd)
+    g = jax.nn.silu(xm_g.astype(p["wg"].dtype) @ p["wg"])
+    # Finch: data-dependent per-channel decay
+    w = jnp.exp(-jnp.exp(p["w0"] + jnp.tanh(
+        xm_w.astype(p["w_a"].dtype) @ p["w_a"]) @ p["w_b"]))      # (B, D)
+    w = w.reshape(b, h, hd).astype(jnp.float32)
+    kf, vf, rf = (t.astype(jnp.float32) for t in (k, v, r))
+    kv = jnp.einsum("bhk,bhv->bhkv", kf, vf)
+    out = jnp.einsum("bhk,bhkv->bhv", rf, s + p["u"][None, :, :, None] * kv)
+    s_new = w[..., None] * s + kv
+    out = out.reshape(b, d)
+    out = rms_norm(out, p["ln_x"])
+    out = (out * g.astype(out.dtype)).astype(p["wo"].dtype) @ p["wo"]
+    return out, s_new
+
+
+def _channel_mix_step(p, x, x_prev):
+    xm_k = x * p["mix_ck"] + x_prev * (1 - p["mix_ck"])
+    xm_r = x * p["mix_cr"] + x_prev * (1 - p["mix_cr"])
+    k = jnp.square(jax.nn.relu(xm_k.astype(p["ck"].dtype) @ p["ck"]))
+    r = jax.nn.sigmoid(xm_r.astype(p["cr"].dtype) @ p["cr"])
+    return r * (k @ p["cv"])
+
+
+def _layer_train(p, x, cfg: ModelConfig):
+    """x: (B, S, D). The projections are time-parallel and hoisted OUT of the
+    recurrence (one batched matmul per projection per layer); only the WKV
+    state update scans over time (pure VPU ops — no matmul, and therefore no
+    per-step TP collective; see EXPERIMENTS §Perf iteration 4)."""
+    b, s, d = x.shape
+    hd = cfg.rwkv_head_dim
+    h = d // hd
+    xa = rms_norm(x, p["ln1"])
+    xa_prev = jnp.pad(xa, ((0, 0), (1, 0), (0, 0)))[:, :-1]       # token shift
+
+    xm = lambda mix: xa * mix + xa_prev * (1 - mix)
+    r = (xm(p["mix_r"]).astype(p["wr"].dtype) @ p["wr"]).reshape(b, s, h, hd)
+    k = (xm(p["mix_k"]).astype(p["wk"].dtype) @ p["wk"]).reshape(b, s, h, hd)
+    v = (xm(p["mix_v"]).astype(p["wv"].dtype) @ p["wv"]).reshape(b, s, h, hd)
+    g = jax.nn.silu(xm(p["mix_g"]).astype(p["wg"].dtype) @ p["wg"])
+    w = jnp.exp(-jnp.exp(p["w0"] + jnp.tanh(
+        xm(p["mix_w"]).astype(p["w_a"].dtype) @ p["w_a"]) @ p["w_b"]))
+    w = w.reshape(b, s, h, hd).astype(jnp.float32)
+
+    def step(st, xs):
+        rt, kt, vt, wt = xs
+        kv = jnp.einsum("bhk,bhv->bhkv", kt, vt)
+        out = jnp.einsum("bhk,bhkv->bhv", rt,
+                         st + p["u"][None, :, :, None] * kv)
+        st = wt[..., None] * st + kv
+        return st, out
+
+    s0 = jnp.zeros((b, h, hd, hd), jnp.float32)
+    to_t = lambda t: t.astype(jnp.float32).swapaxes(0, 1)
+    _, att = jax.lax.scan(step, s0, (to_t(r), to_t(k), to_t(v), to_t(w)))
+    att = att.swapaxes(0, 1).reshape(b, s, d)
+    att = rms_norm(att, p["ln_x"])
+    att = (att * g.reshape(b, s, d).astype(att.dtype)).astype(p["wo"].dtype) @ p["wo"]
+    x = x + att.astype(x.dtype)
+
+    xc = rms_norm(x, p["ln2"])
+    xc_prev = jnp.pad(xc, ((0, 0), (1, 0), (0, 0)))[:, :-1]
+    x = x + _channel_mix_step(p, xc, xc_prev).astype(x.dtype)
+    return x
+
+
+def forward_train(params, tokens, cfg: ModelConfig, *, mesh=None, rules=None,
+                  patch_embeds=None, remat: bool = True):
+    x = params["embed"][tokens]
+    x = constrain(x, rules, "batch", "seq", "d_model")
+
+    def layer(x, p):
+        y = _layer_train(p, x, cfg)
+        y = constrain(y, rules, "batch", "seq", "d_model")
+        return y, None
+
+    if remat:
+        layer = jax.checkpoint(layer, prevent_cse=False)
+    x, _ = jax.lax.scan(layer, x, params["layers"])
+    x = rms_norm(x, params["final_norm"])
+    logits = x @ params["lm_head"]
+    return constrain(logits, rules, "batch", "seq", "vocab")
+
+
+def loss_fn(params, batch, cfg: ModelConfig, *, mesh=None, rules=None):
+    logits = forward_train(params, batch["tokens"], cfg, mesh=mesh, rules=rules)
+    logits = logits.astype(jnp.float32)
+    logz = jax.scipy.special.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, batch["targets"][..., None], axis=-1)[..., 0]
+    mask = batch.get("mask", jnp.ones_like(batch["targets"], jnp.float32))
+    return jnp.sum((logz - gold) * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+
+
+def init_decode_state(cfg: ModelConfig, batch: int, max_len: int, dtype=None):
+    """O(1)-in-context decode state: WKV state + token-shift buffers."""
+    d = cfg.d_model
+    hd = cfg.rwkv_head_dim
+    h = d // hd
+    l = cfg.n_layers
+    return {
+        "s": jnp.zeros((l, batch, h, hd, hd), jnp.float32),
+        "x_att": jnp.zeros((l, batch, d), jnp.float32),
+        "x_ffn": jnp.zeros((l, batch, d), jnp.float32),
+        "length": jnp.zeros((batch,), jnp.int32),
+    }
+
+
+def state_specs(cfg: ModelConfig, rules: MeshRules, *, batch: int, max_len: int,
+                seq_sharded: bool = False):
+    d = cfg.d_model
+    hd = cfg.rwkv_head_dim
+    h = d // hd
+    sp = rules.spec
+    return {
+        "s": sp(None, "batch", None, None, None,
+                sizes=(cfg.n_layers, batch, h, hd, hd)),
+        "x_att": sp(None, "batch", None, sizes=(cfg.n_layers, batch, d)),
+        "x_ffn": sp(None, "batch", None, sizes=(cfg.n_layers, batch, d)),
+        "length": P(None),
+    }
+
+
+def serve_step(params, state, tokens, cfg: ModelConfig, *, mesh=None, rules=None):
+    x = params["embed"][tokens]
+    x = constrain(x, rules, "batch", "d_model")
+
+    def layer(x, carry):
+        p, s, xa_prev, xf_prev = carry["p"], carry["s"], carry["xa"], carry["xf"]
+        xa = rms_norm(x, p["ln1"])
+        att, s_new = _time_mix_step(p, xa, xa_prev, s, cfg)
+        x = x + att.astype(x.dtype)
+        xf = rms_norm(x, p["ln2"])
+        x = x + _channel_mix_step(p, xf, xf_prev).astype(x.dtype)
+        return x, {"s": s_new, "xa": xa.astype(jnp.float32),
+                   "xf": xf.astype(jnp.float32)}
+
+    carry_in = {"p": params["layers"], "s": state["s"],
+                "xa": state["x_att"], "xf": state["x_ffn"]}
+    x, outs = jax.lax.scan(layer, x, carry_in)
+    new_state = dict(state, s=outs["s"], x_att=outs["xa"], x_ffn=outs["xf"],
+                     length=state["length"] + 1)
+    x = rms_norm(x, params["final_norm"])
+    logits = (x @ params["lm_head"]).astype(jnp.float32)
+    return constrain(logits, rules, "batch", "vocab"), new_state

@@ -1,0 +1,99 @@
+"""AdamW + global-norm clip + cosine schedule, with ZeRO-1 state sharding.
+
+No optax dependency (offline container). The optimizer state tree mirrors
+the param tree; `zero1_specs` derives a PartitionSpec tree that additionally
+shards the m/v moments across the data axis wherever a dimension is free
+and divisible — optimizer memory then scales down with DP size (ZeRO-1).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_frac: float = 0.1
+
+
+class OptState(NamedTuple):
+    m: Any
+    v: Any
+    count: jnp.ndarray
+
+
+def init(params) -> OptState:
+    zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    return OptState(m=zeros, v=jax.tree.map(jnp.copy, zeros),
+                    count=jnp.zeros((), jnp.int32))
+
+
+def schedule(cfg: AdamWConfig, step):
+    warm = jnp.minimum(step / max(cfg.warmup_steps, 1), 1.0)
+    prog = jnp.clip((step - cfg.warmup_steps)
+                    / max(cfg.total_steps - cfg.warmup_steps, 1), 0.0, 1.0)
+    cos = 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    return cfg.lr * warm * (cfg.min_lr_frac + (1 - cfg.min_lr_frac) * cos)
+
+
+def global_norm(tree):
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def update(grads, state: OptState, params, cfg: AdamWConfig):
+    count = state.count + 1
+    gn = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(gn, 1e-9))
+    lr = schedule(cfg, count)
+
+    def upd(g, m, v, p):
+        g = g.astype(jnp.float32) * scale
+        m = cfg.b1 * m + (1 - cfg.b1) * g
+        v = cfg.b2 * v + (1 - cfg.b2) * jnp.square(g)
+        mh = m / (1 - cfg.b1 ** count)
+        vh = v / (1 - cfg.b2 ** count)
+        step_ = mh / (jnp.sqrt(vh) + cfg.eps) + cfg.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * step_).astype(p.dtype), m, v
+
+    out = jax.tree.map(upd, grads, state.m, state.v, params)
+    new_params = jax.tree.map(lambda t: t[0], out, is_leaf=lambda t: isinstance(t, tuple))
+    new_m = jax.tree.map(lambda t: t[1], out, is_leaf=lambda t: isinstance(t, tuple))
+    new_v = jax.tree.map(lambda t: t[2], out, is_leaf=lambda t: isinstance(t, tuple))
+    metrics = {"grad_norm": gn, "lr": lr}
+    return new_params, OptState(new_m, new_v, count), metrics
+
+
+def zero1_specs(param_specs, rules, shard_axis: str = "data",
+                sizes_tree=None):
+    """ZeRO-1: shard each moment tensor along its first free & divisible dim
+    across `shard_axis` (on top of the parameter's own TP sharding)."""
+    extent = rules.mesh.shape.get(shard_axis, 1)
+
+    def one(spec, shape):
+        entries = list(spec) + [None] * (len(shape) - len(spec))
+        for i, (e, s) in enumerate(zip(entries, shape)):
+            if e is None and s % extent == 0 and s >= extent:
+                entries[i] = shard_axis
+                break
+        return P(*entries)
+
+    if sizes_tree is None:
+        raise ValueError("zero1_specs needs the shapes tree")
+    return jax.tree.map(
+        lambda spec, shp: one(spec, shp.shape),
+        param_specs, sizes_tree,
+        is_leaf=lambda x: isinstance(x, P))

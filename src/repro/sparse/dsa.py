@@ -1,0 +1,142 @@
+"""DeepSeek Sparse Attention (DSA) decode block: indexer → Top-K → sparse MLA.
+
+Faithful to the paper's pipeline (§2): a lightweight MQA indexer scores all
+N cached tokens (Eq. 1), an exact Top-K keeps K=2048, and attention runs
+over the selected rows only. The previous step's Top-K is carried as
+functional state (the paper's prev_topk HBM buffer) and seeds the GVR
+selector.
+
+The XLA path here is what the distributed dry-run lowers; the Pallas
+kernels (repro.kernels) are the per-device hot-spot implementations of the
+same three stages, validated against the refs in kernels/ref.py.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import apply_rotary
+from .selector import select_topk
+
+NEG = -3.4028235e38
+
+
+def indexer_init(key, d_model: int, heads: int, dim: int, dtype):
+    k1, k2 = jax.random.split(key)
+    s = d_model ** -0.5
+    return {
+        "wq": (jax.random.normal(k1, (d_model, heads * dim)) * s).astype(dtype),
+        "wk": (jax.random.normal(k2, (d_model, dim)) * s).astype(dtype),
+        "w": jnp.ones((heads,), jnp.float32) / heads,
+    }
+
+
+def indexer_scores(params, x: jnp.ndarray, idx_kcache: jnp.ndarray,
+                   positions: jnp.ndarray, lengths: jnp.ndarray,
+                   *, heads: int, dim: int, rope_base: float,
+                   rules=None) -> jnp.ndarray:
+    """Eq. 1: I = sum_j w_j ReLU(q_j · K_I^T). x: (B, D) one decode token.
+
+    idx_kcache: (B, N, dim) — the indexer's own K cache (RoPE'd at write).
+    Returns (B, N) f32 scores with sentinel beyond `lengths`.
+    """
+    from repro.parallel.sharding import constrain
+    b, d = x.shape
+    n = idx_kcache.shape[1]
+    idx_kcache = constrain(idx_kcache, rules, "batch", None, None)
+    q = (x @ params["wq"]).reshape(b, 1, heads, dim)
+    q = apply_rotary(q, positions[:, None], kind="rope", base=rope_base)[:, 0]
+    s = jnp.einsum("bhd,bnd->bhn", q.astype(idx_kcache.dtype), idx_kcache,
+                   preferred_element_type=jnp.float32)
+    s = jax.nn.relu(s)
+    scores = jnp.einsum("h,bhn->bn", params["w"].astype(jnp.float32), s)
+    pos = jnp.arange(n, dtype=jnp.int32)
+    return jnp.where(pos[None, :] < lengths[:, None], scores, NEG)
+
+
+def indexer_k(params, x: jnp.ndarray, positions: jnp.ndarray,
+              *, dim: int, rope_base: float) -> jnp.ndarray:
+    """Indexer key for the new token (B, dim), RoPE'd at its position."""
+    kk = (x @ params["wk"]).reshape(x.shape[0], 1, 1, dim)
+    return apply_rotary(kk, positions[:, None], kind="rope",
+                        base=rope_base)[:, 0, 0]
+
+
+class DSAOutput(NamedTuple):
+    attn_out: jnp.ndarray      # (B, H, HD) f32
+    topk_idx: jnp.ndarray      # (B, K) int32 — next step's prediction
+    secant_iters: Optional[jnp.ndarray]
+
+
+def dsa_sparse_attention(q: jnp.ndarray, kcache: jnp.ndarray, vcache: jnp.ndarray,
+                         topk_idx: jnp.ndarray, lengths: jnp.ndarray,
+                         *, scale: float, rules=None) -> jnp.ndarray:
+    """Attention over the Top-K gathered rows only (XLA gather path).
+
+    q: (B,H,HD); caches: (B,N,KVH,HD); topk_idx: (B,K) (may exceed length —
+    masked). O(K) work independent of N (paper Table 2 'Sparse MLA').
+    """
+    b, h, hd = q.shape
+    kvh = kcache.shape[2]
+    g = h // kvh
+    k = topk_idx.shape[-1]
+    from repro.parallel.sharding import constrain
+    # Decode-attention core is batch-parallel by construction: q is pinned
+    # batch-only so the partitioner cannot back-propagate a (kvh, g) head
+    # sharding through take_along_axis into the cache (which would force an
+    # 8+ GB cache all-gather per step). TP lives in the projections.
+    q = constrain(q, rules, "batch", None, None)
+    # Pin the cache to its canonical layout (batch-sharded, kv replicated) at
+    # the gather site: XLA's gather partitioner otherwise re-shards/replicates
+    # the operand to satisfy head-sharding propagated from downstream matmuls.
+    kcache = constrain(kcache, rules, "batch", None, None, None)
+    vcache = constrain(vcache, rules, "batch", None, None, None)
+    idx_safe = jnp.clip(topk_idx, 0, kcache.shape[1] - 1)
+    kg = jnp.take_along_axis(
+        kcache, idx_safe[:, :, None, None].repeat(kvh, 2).repeat(hd, 3), axis=1)
+    vg = jnp.take_along_axis(
+        vcache, idx_safe[:, :, None, None].repeat(kvh, 2).repeat(hd, 3), axis=1)
+    # keep the gather batch-parallel: resharding (for TP heads) must happen on
+    # the small (B,K) gathered rows, never on the (B,N) cache — otherwise the
+    # partitioner all-gathers the entire cache per step.
+    kg = constrain(kg, rules, "batch", None, None, None)
+    vg = constrain(vg, rules, "batch", None, None, None)
+    logits = jnp.einsum("bkgd,bskd->bkgs", q.reshape(b, kvh, g, hd), kg,
+                        preferred_element_type=jnp.float32) * scale
+    valid = (topk_idx >= 0) & (topk_idx < lengths[:, None])
+    logits = jnp.where(valid[:, None, None, :], logits, NEG)
+    p = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bkgs,bskd->bkgd", p.astype(vg.dtype), vg,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(b, h, hd)
+
+
+def dsa_decode(q: jnp.ndarray, kcache: jnp.ndarray, vcache: jnp.ndarray,
+               indexer_params, x: jnp.ndarray, idx_kcache: jnp.ndarray,
+               prev_topk: jnp.ndarray, lengths: jnp.ndarray,
+               *, k: int, scale: float, heads: int, dim: int,
+               rope_base: float, selector: str = "auto",
+               max_candidates: Optional[int] = None,
+               gate_max_n: int = 200_000,
+               min_n: int = 4096,
+               swa_window: Optional[int] = None, rules=None,
+               mesh=None) -> DSAOutput:
+    """Full DSA decode step for one layer (indexer → select → sparse attn)."""
+    positions = lengths - 1
+    scores = indexer_scores(indexer_params, x, idx_kcache, positions, lengths,
+                            heads=heads, dim=dim, rope_base=rope_base,
+                            rules=rules)
+    if swa_window is not None:
+        # SWA interplay: selection restricted to the attention window
+        pos = jnp.arange(scores.shape[-1], dtype=jnp.int32)
+        in_win = pos[None, :] > (lengths[:, None] - 1 - swa_window)
+        scores = jnp.where(in_win, scores, NEG)
+    sel = select_topk(scores, k, prev_idx=prev_topk, method=selector,
+                      max_candidates=max_candidates, gate_max_n=gate_max_n,
+                      min_n_for_selection=min_n, mesh=mesh)
+    out = dsa_sparse_attention(q, kcache, vcache, sel.indices, lengths,
+                               scale=scale, rules=rules)
+    return DSAOutput(out, sel.indices, sel.secant_iters)

@@ -1,0 +1,116 @@
+"""Radix-select / sort baselines (paper §2.2) and selector dispatch (§5.5)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.topk_baselines import (exact_topk, radix_select_topk, sort_topk,
+                                       _float_to_sortable_u32,
+                                       _sortable_u32_to_float)
+from repro.sparse.selector import select_topk
+
+RNG = np.random.default_rng(1)
+
+
+def test_key_transform_monotone_roundtrip():
+    vals = np.concatenate([
+        RNG.normal(size=1000) * 10 ** RNG.uniform(-30, 30, 1000),
+        [0.0, -0.0, 1e-45, -1e-45, 3.4e38, -3.4e38]]).astype(np.float32)
+    sv = np.sort(vals)
+    x = jnp.asarray(sv)
+    keys = np.asarray(_float_to_sortable_u32(x)).astype(np.int64)
+    # strict value increase must give strict key increase (equal values — e.g.
+    # -0.0 vs 0.0 — may order either way under np.sort)
+    strict = sv[1:] > sv[:-1]
+    assert np.all(np.diff(keys)[strict] > 0)
+    back = np.asarray(_sortable_u32_to_float(_float_to_sortable_u32(x)))
+    # -0.0 maps back to -0.0; comparison via bit equality
+    assert np.array_equal(back.view(np.uint32), np.asarray(x).view(np.uint32))
+
+
+@pytest.mark.parametrize("dist", ["normal", "lognormal", "ties", "const"])
+@pytest.mark.parametrize("k", [1, 100, 2048])
+def test_radix_exact(dist, k):
+    b, n = 2, 8192
+    if dist == "normal":
+        x = RNG.normal(size=(b, n))
+    elif dist == "lognormal":
+        x = RNG.lognormal(0, 3, size=(b, n))
+    elif dist == "ties":
+        x = RNG.integers(0, 5, size=(b, n)).astype(float)
+    else:
+        x = np.full((b, n), 2.5)
+    x = jnp.asarray(x, jnp.float32)
+    v, i, stats = radix_select_topk(x, k)
+    rv, _ = exact_topk(x, k)
+    np.testing.assert_array_equal(np.sort(np.asarray(v)), np.sort(np.asarray(rv)))
+    assert all(len(set(r.tolist())) == k for r in np.asarray(i))
+    assert np.all(np.asarray(stats.passes) >= 1)
+
+
+def test_radix_distribution_agnostic_passes():
+    """Radix pass count must NOT depend on any prediction signal — only on
+    bit clustering (paper Table 1: Data Sensitivity 'Low')."""
+    b, n, k = 2, 16384, 2048
+    x = jnp.asarray(RNG.normal(size=(b, n)), jnp.float32)
+    _, _, s1 = radix_select_topk(x, k)
+    _, _, s2 = radix_select_topk(x, k)   # identical input -> identical passes
+    np.testing.assert_array_equal(np.asarray(s1.passes), np.asarray(s2.passes))
+
+
+def test_sort_topk_matches():
+    x = jnp.asarray(RNG.normal(size=(3, 1024)), jnp.float32)
+    v, i = sort_topk(x, 32)
+    rv, _ = exact_topk(x, 32)
+    np.testing.assert_array_equal(np.asarray(v), np.asarray(rv))
+
+
+@settings(max_examples=30, deadline=None)
+@given(n=st.integers(32, 2048), seed=st.integers(0, 2**31 - 1),
+       k_frac=st.floats(0.01, 1.0))
+def test_property_radix_exact(n, seed, k_frac):
+    rng = np.random.default_rng(seed)
+    k = max(1, min(n, int(n * k_frac)))
+    x = jnp.asarray(rng.normal(size=(1, n)) * 10 ** rng.uniform(-10, 10),
+                    jnp.float32)
+    v, i, _ = radix_select_topk(x, k)
+    rv, _ = exact_topk(x, k)
+    np.testing.assert_array_equal(np.sort(np.asarray(v)), np.sort(np.asarray(rv)))
+
+
+# ---------------- selector dispatch (paper Fig. 8 / §5.5) -----------------
+
+def test_selector_auto_gates():
+    b, k = 2, 64
+    # short row -> exact
+    x = jnp.asarray(RNG.normal(size=(b, 2048)), jnp.float32)
+    out = select_topk(x, k, method="auto", min_n_for_selection=4096)
+    assert out.method == "exact"
+    # long row + prediction -> gvr
+    x = jnp.asarray(RNG.normal(size=(b, 8192)), jnp.float32)
+    prev = jnp.asarray(np.stack([RNG.choice(8192, k, replace=False)
+                                 for _ in range(b)]), jnp.int32)
+    out = select_topk(x, k, prev_idx=prev, method="auto",
+                      min_n_for_selection=4096)
+    assert out.method == "gvr"
+    # no prediction -> radix fallback (canUseHeuristic fails)
+    out = select_topk(x, k, method="auto", min_n_for_selection=4096)
+    assert out.method == "radix"
+    # beyond the N gate -> radix even with prediction
+    out = select_topk(x, k, prev_idx=prev, method="auto",
+                      min_n_for_selection=4096, gate_max_n=4096)
+    assert out.method == "radix"
+
+
+@pytest.mark.parametrize("method", ["gvr", "radix", "exact"])
+def test_selector_methods_agree(method):
+    b, n, k = 2, 8192, 128
+    x = jnp.asarray(RNG.normal(size=(b, n)), jnp.float32)
+    prev = jnp.asarray(np.stack([RNG.choice(n, k, replace=False)
+                                 for _ in range(b)]), jnp.int32)
+    out = select_topk(x, k, prev_idx=prev, method=method)
+    rv, _ = exact_topk(x, k)
+    got = np.sort(np.take_along_axis(np.asarray(x), np.asarray(out.indices), -1))
+    np.testing.assert_array_equal(got, np.sort(np.asarray(rv)))

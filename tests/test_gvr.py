@@ -1,0 +1,167 @@
+"""Core GVR exactness + phase-statistics behavior (paper §4)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import gvr
+from repro.core.gvr import gvr_threshold, gvr_topk, uniform_pre_idx
+
+RNG = np.random.default_rng(0)
+
+
+def exact_match(x, res, k):
+    ref_v, _ = jax.lax.top_k(jnp.asarray(x, jnp.float32), k)
+    got = np.sort(np.asarray(res.values), axis=-1)
+    want = np.sort(np.asarray(ref_v), axis=-1)
+    idx = np.asarray(res.indices)
+    distinct = all(len(set(r.tolist())) == k for r in idx.reshape(-1, k))
+    gathered = np.take_along_axis(np.asarray(x, np.float32),
+                                  idx, axis=-1)
+    return (np.array_equal(got, want) and distinct
+            and np.array_equal(np.sort(gathered, -1), want))
+
+
+DISTS = {
+    "normal": lambda b, n: RNG.normal(size=(b, n)),
+    "lognormal": lambda b, n: RNG.lognormal(0, 2, size=(b, n)),
+    "beta": lambda b, n: RNG.beta(2, 5, size=(b, n)),          # paper L21
+    "weibull": lambda b, n: RNG.weibull(1.5, size=(b, n)),     # paper L22/L60
+    "logistic": lambda b, n: RNG.logistic(size=(b, n)),        # paper L1
+    "ties8": lambda b, n: RNG.integers(0, 8, size=(b, n)).astype(float),
+    "const": lambda b, n: np.ones((b, n)),
+    "negzero": lambda b, n: -np.abs(RNG.normal(size=(b, n))),
+}
+
+
+@pytest.mark.parametrize("dist", sorted(DISTS))
+@pytest.mark.parametrize("k", [1, 64, 512])
+def test_exactness_distributions(dist, k):
+    b, n = 3, 4096
+    x = jnp.asarray(DISTS[dist](b, n), jnp.float32)
+    prev = jnp.asarray(np.stack([RNG.choice(n, max(k, 16), replace=False)
+                                 for _ in range(b)]), jnp.int32)
+    res = gvr_topk(x, prev, k)
+    assert exact_match(x, res, k), dist
+
+
+@pytest.mark.parametrize("quality", ["perfect", "good", "random", "adversarial",
+                                     "all_dup"])
+def test_prediction_quality_never_breaks_exactness(quality):
+    b, n, k = 2, 8192, 256
+    x = jnp.asarray(RNG.normal(size=(b, n)), jnp.float32)
+    if quality == "perfect":
+        prev = jnp.argsort(-x, axis=-1)[:, :k]
+    elif quality == "good":
+        xp = np.asarray(x) + 0.05 * RNG.normal(size=(b, n))
+        prev = jnp.asarray(np.argsort(-xp, -1)[:, :k], jnp.int32)
+    elif quality == "random":
+        prev = jnp.asarray(np.stack([RNG.choice(n, k, replace=False)
+                                     for _ in range(b)]), jnp.int32)
+    elif quality == "adversarial":
+        prev = jnp.argsort(x, axis=-1)[:, :k]        # bottom-k!
+    else:
+        prev = jnp.zeros((b, k), jnp.int32)
+    res = gvr_topk(x, prev.astype(jnp.int32), k)
+    assert exact_match(x, res, k)
+
+
+def test_good_prediction_converges_fast():
+    """Paper §6.3.2: high-correlation preIdx -> 1-2 secant iterations."""
+    b, n, k = 4, 65536, 2048
+    x = jnp.asarray(RNG.normal(size=(b, n)), jnp.float32)
+    xp = np.asarray(x) + 0.1 * RNG.normal(size=(b, n))
+    prev = jnp.asarray(np.argsort(-xp, -1)[:, :k], jnp.int32)
+    res = gvr_topk(x, prev, k)
+    assert int(np.max(np.asarray(res.stats.secant_iters))) <= 4
+    assert not bool(np.any(np.asarray(res.stats.fallback)))
+
+
+def test_iteration_counts_degrade_with_prediction_quality():
+    """Paper Table 9 ordering: better preIdx -> fewer phase-2 iterations."""
+    b, n, k = 8, 32768, 1024
+    x = jnp.asarray(RNG.normal(size=(b, n)), jnp.float32)
+    xp = np.asarray(x) + 0.05 * RNG.normal(size=(b, n))
+    prev_good = jnp.asarray(np.argsort(-xp, -1)[:, :k], jnp.int32)
+    prev_rand = jnp.asarray(np.stack([RNG.choice(n, k, replace=False)
+                                      for _ in range(b)]), jnp.int32)
+    it_good = np.mean(np.asarray(gvr_topk(x, prev_good, k).stats.secant_iters))
+    it_rand = np.mean(np.asarray(gvr_topk(x, prev_rand, k).stats.secant_iters))
+    assert it_good <= it_rand + 0.5
+
+
+def test_threshold_is_exact_kth():
+    b, n, k = 4, 4096, 128
+    x = jnp.asarray(RNG.normal(size=(b, n)), jnp.float32)
+    st_ = gvr_threshold(x, uniform_pre_idx(n, k, b), k)
+    kth = np.sort(np.asarray(x), -1)[:, -k]
+    np.testing.assert_array_equal(np.asarray(st_.threshold), kth)
+    assert np.all(np.asarray(st_.n_gt) < k)
+    assert np.all(np.asarray(st_.n_ge) >= k)
+
+
+def test_lengths_masking():
+    b, n, k = 2, 2048, 64
+    x = jnp.asarray(RNG.normal(size=(b, n)), jnp.float32)
+    lengths = jnp.asarray([1500, 700], jnp.int32)
+    prev = uniform_pre_idx(600, k, b)
+    res = gvr_topk(x, prev, k, lengths=lengths)
+    idx = np.asarray(res.indices)
+    assert (idx[0] < 1500).all() and (idx[1] < 700).all()
+    for r in range(b):
+        want = np.sort(np.asarray(x[r, :int(lengths[r])]))[-k:]
+        np.testing.assert_array_equal(np.sort(np.asarray(res.values[r])), want)
+
+
+def test_tie_policy_lowest_index():
+    x = jnp.asarray([[5.0] * 10 + [1.0] * 10], jnp.float32)
+    res = gvr_topk(x, uniform_pre_idx(20, 4, 1), 4)
+    np.testing.assert_array_equal(np.sort(np.asarray(res.indices[0])),
+                                  [0, 1, 2, 3])
+
+
+def test_global_passes_model():
+    b, n, k = 2, 8192, 256
+    x = jnp.asarray(RNG.normal(size=(b, n)), jnp.float32)
+    res = gvr_topk(x, uniform_pre_idx(n, k, b), k)
+    passes = np.asarray(gvr.global_passes(res.stats))
+    assert np.all(passes == np.asarray(res.stats.secant_iters) + 1)
+
+
+@settings(max_examples=60, deadline=None)
+@given(
+    data=st.data(),
+    n=st.integers(64, 1024),
+    k_frac=st.floats(0.01, 0.99),
+    dist=st.sampled_from(["normal", "heavy", "ints", "bimodal"]),
+    pred=st.sampled_from(["uniform", "random", "dup", "top"]),
+)
+def test_property_exactness(data, n, k_frac, dist, pred):
+    """PROPERTY: for any finite input and any prediction set, GVR output is
+    the exact Top-K multiset with distinct indices (Lemma 1 + snap)."""
+    k = max(1, int(n * k_frac))
+    seed = data.draw(st.integers(0, 2**31 - 1))
+    rng = np.random.default_rng(seed)
+    if dist == "normal":
+        x = rng.normal(size=(1, n))
+    elif dist == "heavy":
+        x = rng.standard_cauchy(size=(1, n)).clip(-1e37, 1e37)
+    elif dist == "ints":
+        x = rng.integers(-3, 3, size=(1, n)).astype(float)
+    else:
+        x = np.where(rng.random((1, n)) < 0.5,
+                     rng.normal(-100, 1, (1, n)), rng.normal(100, 1, (1, n)))
+    x = jnp.asarray(x, jnp.float32)
+    m = max(k, 8)
+    if pred == "uniform":
+        prev = uniform_pre_idx(n, m, 1)
+    elif pred == "random":
+        prev = jnp.asarray(rng.integers(0, n, (1, m)), jnp.int32)
+    elif pred == "dup":
+        prev = jnp.full((1, m), int(rng.integers(0, n)), jnp.int32)
+    else:
+        prev = jnp.argsort(-x, axis=-1)[:, :m]
+    res = gvr_topk(x, prev, k)
+    assert exact_match(x, res, k)

@@ -1,0 +1,71 @@
+"""Temporal-correlation machinery + RoPE/YaRN structure (paper §3)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (compute_static_pre_idx, g_delta, generate_indexer_scores,
+                        hit_ratio, init_feedback, shifted_hit_ratio,
+                        update_feedback, yarn_inv_freq)
+
+
+def test_g_delta_peak_at_zero():
+    g = np.asarray(g_delta(4096))
+    assert np.argmax(g) == 0                       # self-position max
+    assert g[0] == 2 * 32                          # 2 * d_rope/2 cosines at 1
+
+
+def test_yarn_preserves_long_range_peaks():
+    """Paper §3.2: YaRN keeps significant peaks at large Delta; plain RoPE's
+    secondary peaks decay faster."""
+    g_yarn = np.asarray(g_delta(32768, yarn=True))
+    g_rope = np.asarray(g_delta(32768, yarn=False))
+    far = slice(16384, 32768)
+    assert g_yarn[far].max() > g_rope[far].max()
+
+
+def test_yarn_inv_freq_interpolates_low_freqs():
+    y = np.asarray(yarn_inv_freq())
+    import repro.core.rope as rope
+    r = np.asarray(rope.rope_inv_freq())
+    assert np.all(y <= r + 1e-9)                  # interpolation slows freqs
+    assert np.allclose(y[0], r[0])                # high-freq preserved
+
+
+def test_static_prior_beats_random_on_synthetic():
+    """Paper App. B/E: the static RoPE prior overlaps the true Top-K far above
+    chance on synthetic (random Q/K + YaRN-RoPE) scores."""
+    key = jax.random.PRNGKey(0)
+    n, k = 8192, 512
+    scores, pre = generate_indexer_scores(key, n, k)
+    true_idx = jax.lax.top_k(scores, k)[1]
+    overlap = float(hit_ratio(true_idx[None], pre[None], n)[0])
+    assert overlap > 5 * (k / n), overlap          # >> random baseline
+
+
+def test_hit_ratio_basics():
+    a = jnp.asarray([[0, 1, 2, 3]])
+    b = jnp.asarray([[2, 3, 4, 5]])
+    assert float(hit_ratio(a, b, 10)[0]) == 0.5
+    assert float(hit_ratio(a, a, 10)[0]) == 1.0
+
+
+def test_shifted_hit_ratio():
+    a = jnp.asarray([[1, 2, 3, 4]])
+    prev = jnp.asarray([[0, 1, 2, 3]])
+    assert float(shifted_hit_ratio(a, prev, 10, shift=1)[0]) == 1.0
+
+
+def test_feedback_state():
+    fb = init_feedback(num_layers=3, batch=2, k=8, seq_len_hint=100)
+    assert fb.prev_idx.shape == (3, 2, 8)
+    assert not bool(fb.valid.any())
+    fb = update_feedback(fb, 1, jnp.ones((2, 8), jnp.int32))
+    assert bool(fb.valid[1].all()) and not bool(fb.valid[0].any())
+
+
+def test_static_pre_idx_shape_and_range():
+    pre = compute_static_pre_idx(4096, 256)
+    assert pre.shape == (256,)
+    u = np.unique(np.asarray(pre))
+    assert len(u) == 256 and u.min() >= 0 and u.max() < 4096
