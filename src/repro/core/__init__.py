@@ -5,7 +5,9 @@ from .gvr import (GVRResult, GVRStats, extract_topk, global_passes, gvr_threshol
 from .rope import (compute_static_pre_idx, g_delta, generate_indexer_scores,
                    yarn_inv_freq)
 from .sp_gvr import SPGVRResult, sp_gvr_topk, sp_gvr_topk_local
-from .temporal import TopKFeedback, hit_ratio, init_feedback, shifted_hit_ratio, update_feedback
+from .temporal import (TopKFeedback, hit_ratio, init_feedback, recycle_slot,
+                       recycle_slot_arrays, reset_slot, reset_slot_arrays,
+                       seed_slot_idx, shifted_hit_ratio, update_feedback)
 from .topk_baselines import exact_topk, radix_select_topk, sort_topk
 
 __all__ = [
@@ -13,6 +15,8 @@ __all__ = [
     "gvr_topk", "uniform_pre_idx", "DEFAULT_K",
     "compute_static_pre_idx", "g_delta", "generate_indexer_scores", "yarn_inv_freq",
     "SPGVRResult", "sp_gvr_topk", "sp_gvr_topk_local",
-    "TopKFeedback", "hit_ratio", "init_feedback", "shifted_hit_ratio", "update_feedback",
+    "TopKFeedback", "hit_ratio", "init_feedback", "recycle_slot",
+    "recycle_slot_arrays", "reset_slot", "reset_slot_arrays", "seed_slot_idx",
+    "shifted_hit_ratio", "update_feedback",
     "exact_topk", "radix_select_topk", "sort_topk",
 ]

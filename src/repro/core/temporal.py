@@ -25,8 +25,7 @@ def init_feedback(num_layers: int, batch: int, k: int,
     [0, k) when no hint): Phase 1 then sees a uniform value sample, which is
     still a better threshold seed than a blind radix decomposition
     (paper Table 9 row b: even random indices give 1.44x)."""
-    n = seq_len_hint if seq_len_hint is not None else k
-    base = jnp.linspace(0, max(n - 1, 1), k).astype(jnp.int32)
+    base = seed_slot_idx(k, seq_len_hint)
     prev = jnp.broadcast_to(base[None, None, :], (num_layers, batch, k))
     return TopKFeedback(prev_idx=prev, valid=jnp.zeros((num_layers, batch), bool))
 
@@ -36,6 +35,52 @@ def update_feedback(fb: TopKFeedback, layer: jnp.ndarray | int,
     """Record layer's Top-K for the next decode step."""
     prev = fb.prev_idx.at[layer].set(new_idx.astype(jnp.int32))
     valid = fb.valid.at[layer].set(True)
+    return TopKFeedback(prev_idx=prev, valid=valid)
+
+
+def seed_slot_idx(k: int, seq_len_hint: Optional[int] = None) -> jnp.ndarray:
+    """Even-spacing warm-start seed: (K,) int32 strictly inside the KV
+    prefix [0, seq_len_hint) (paper Table 9 row b — a uniform value sample
+    still beats a blind radix decomposition even with no temporal signal)."""
+    n = seq_len_hint if seq_len_hint is not None else k
+    return jnp.linspace(0, max(n - 1, 0), k).astype(jnp.int32)
+
+
+def reset_slot_arrays(prev_idx: jnp.ndarray, valid: jnp.ndarray, slot,
+                      seq_len_hint: Optional[int] = None):
+    """Array-level slot reset shared by TopKFeedback and model decode state.
+
+    prev_idx: (L, B, K); valid: (L, B). The slot's prediction rows are
+    re-seeded (even spacing over `seq_len_hint`) and marked invalid, so the
+    first selection after admission dispatches through the non-GVR fallback
+    while the *next* step's genuine feedback re-arms the GVR path.
+    """
+    seed = seed_slot_idx(prev_idx.shape[-1], seq_len_hint)
+    prev_idx = prev_idx.at[:, slot].set(seed)
+    valid = valid.at[:, slot].set(False)
+    return prev_idx, valid
+
+
+def recycle_slot_arrays(prev_idx: jnp.ndarray, valid: jnp.ndarray, slot):
+    """Array-level slot recycle on eviction: poison the slot's predictions
+    with -1 (out-of-range; any accidental use is caught by clamping/masking)
+    and drop validity. A later admission must call `reset_slot_arrays`."""
+    prev_idx = prev_idx.at[:, slot].set(jnp.int32(-1))
+    valid = valid.at[:, slot].set(False)
+    return prev_idx, valid
+
+
+def reset_slot(fb: TopKFeedback, slot,
+               seq_len_hint: Optional[int] = None) -> TopKFeedback:
+    """Slot admission: re-seed one slot of the feedback buffer (all layers)."""
+    prev, valid = reset_slot_arrays(fb.prev_idx, fb.valid, slot, seq_len_hint)
+    return TopKFeedback(prev_idx=prev, valid=valid)
+
+
+def recycle_slot(fb: TopKFeedback, slot) -> TopKFeedback:
+    """Slot eviction: poison one slot so stale predictions can never leak
+    into the next request admitted there."""
+    prev, valid = recycle_slot_arrays(fb.prev_idx, fb.valid, slot)
     return TopKFeedback(prev_idx=prev, valid=valid)
 
 

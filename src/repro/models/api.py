@@ -50,6 +50,29 @@ class Model:
         return self.mod.state_specs(self.cfg, rules, batch=batch,
                                     max_len=max_len, seq_sharded=seq_sharded)
 
+    # ---- slot-wise decode-state hooks (continuous-batching engine) ------
+    def state_batch_axes(self) -> Optional[Dict[str, int]]:
+        """Batch(slot)-axis map of the decode-state leaves, or None when the
+        family doesn't expose slot-wise state (engine unsupported)."""
+        fn = getattr(self.mod, "state_batch_axes", None)
+        return fn(self.cfg) if fn is not None else None
+
+    def reset_slot_state(self, state, slot, *, seq_len_hint=None):
+        """Reset one slot for admission: zero length, re-seed GVR feedback."""
+        fn = getattr(self.mod, "reset_slot_state", None)
+        if fn is None:
+            raise NotImplementedError(
+                f"family {self.cfg.family!r} has no slot-wise state reset")
+        return fn(self.cfg, state, slot, seq_len_hint=seq_len_hint)
+
+    def recycle_slot_state(self, state, slot):
+        """Recycle one slot on eviction: poison stale prediction feedback."""
+        fn = getattr(self.mod, "recycle_slot_state", None)
+        if fn is None:
+            raise NotImplementedError(
+                f"family {self.cfg.family!r} has no slot-wise state recycle")
+        return fn(self.cfg, state, slot)
+
     def serve_step(self, params, state, tokens, *, mesh=None, rules=None,
                    seq_sharded: bool = False):
         if self.cfg.family == "hybrid":

@@ -217,10 +217,59 @@ def init_decode_state(cfg: ModelConfig, batch: int, max_len: int,
         "length": jnp.zeros((batch,), jnp.int32),
     }
     if cfg.dsa.enabled:
+        from repro.core.temporal import seed_slot_idx
         state["idx_k"] = jnp.zeros((l, batch, max_len, cfg.dsa.indexer_dim), dtype)
         kk = min(cfg.dsa.k, max_len)
-        base = jnp.linspace(0, max(max_len - 1, 1), kk).astype(jnp.int32)
+        base = seed_slot_idx(kk, max_len)
         state["prev_topk"] = jnp.broadcast_to(base[None, None], (l, batch, kk))
+        # Validity of the prediction signal, per layer × slot: False until a
+        # DSA step has written genuine feedback (the even-spacing seed above
+        # is a warm-start hint, not history). The selector's per-row dispatch
+        # sends invalid rows through the non-GVR fallback.
+        state["topk_valid"] = jnp.zeros((l, batch), bool)
+        # Telemetry: which rows the selector's GVR path actually served on
+        # the last step (the serving engine's per-slot method log).
+        state["sel_gvr"] = jnp.zeros((l, batch), bool)
+    return state
+
+
+def state_batch_axes(cfg: ModelConfig) -> Dict[str, int]:
+    """Batch (slot) axis of every decode-state leaf — the serving engine's
+    contract for per-slot slicing/merging (continuous batching)."""
+    axes = {"k": 1, "v": 1, "length": 0}
+    if cfg.dsa.enabled:
+        axes.update(idx_k=1, prev_topk=1, topk_valid=1, sel_gvr=1)
+    return axes
+
+
+def reset_slot_state(cfg: ModelConfig, state: Dict[str, jnp.ndarray], slot,
+                     seq_len_hint: Optional[int] = None) -> Dict[str, jnp.ndarray]:
+    """Slot admission hook: zero one slot's length and re-seed its GVR
+    feedback (even spacing over `seq_len_hint`, invalid until the first DSA
+    step — paper Table 9 row b). KV rows need no clearing: every consumer
+    masks beyond `length`."""
+    state = dict(state)
+    state["length"] = state["length"].at[slot].set(0)
+    if cfg.dsa.enabled:
+        from repro.core.temporal import reset_slot_arrays
+        prev, valid = reset_slot_arrays(state["prev_topk"], state["topk_valid"],
+                                        slot, seq_len_hint)
+        state["prev_topk"], state["topk_valid"] = prev, valid
+        state["sel_gvr"] = state["sel_gvr"].at[:, slot].set(False)
+    return state
+
+
+def recycle_slot_state(cfg: ModelConfig, state: Dict[str, jnp.ndarray],
+                       slot) -> Dict[str, jnp.ndarray]:
+    """Slot eviction hook: poison the slot's predictions so they can never
+    leak into the next admitted request (see temporal.recycle_slot_arrays)."""
+    state = dict(state)
+    if cfg.dsa.enabled:
+        from repro.core.temporal import recycle_slot_arrays
+        prev, valid = recycle_slot_arrays(state["prev_topk"],
+                                          state["topk_valid"], slot)
+        state["prev_topk"], state["topk_valid"] = prev, valid
+        state["sel_gvr"] = state["sel_gvr"].at[:, slot].set(False)
     return state
 
 
@@ -241,6 +290,8 @@ def state_specs(cfg: ModelConfig, rules: MeshRules, *, batch: int, max_len: int,
                             sizes=(cfg.n_layers, batch, max_len, cfg.dsa.indexer_dim))
         specs["prev_topk"] = sp(None, "batch", None,
                                 sizes=(cfg.n_layers, batch, min(cfg.dsa.k, max_len)))
+        specs["topk_valid"] = sp(None, "batch", sizes=(cfg.n_layers, batch))
+        specs["sel_gvr"] = sp(None, "batch", sizes=(cfg.n_layers, batch))
     return specs
 
 
@@ -273,6 +324,7 @@ def serve_step(params, state, tokens, cfg: ModelConfig, *, mesh=None,
     def layer(x, carry):
         p, kc, vc, idx_kc, prev_topk = (carry["p"], carry["k"], carry["v"],
                                         carry.get("idx_k"), carry.get("prev_topk"))
+        topk_valid = carry.get("topk_valid")
         # pin cache layouts at loop entry — scatter/gather partitioners
         # otherwise adopt head-sharding propagated from the projections and
         # re-gather the full cache every step
@@ -306,18 +358,27 @@ def serve_step(params, state, tokens, cfg: ModelConfig, *, mesh=None,
                 k=prev_topk.shape[-1], scale=hd ** -0.5,
                 heads=cfg.dsa.indexer_heads, dim=cfg.dsa.indexer_dim,
                 rope_base=cfg.rope_base, selector=cfg.dsa.selector,
+                prev_valid=topk_valid,
                 max_candidates=cfg.dsa.max_candidates,
                 gate_max_n=cfg.dsa.gate_max_n, min_n=cfg.dsa.min_n,
                 swa_window=cfg.swa_window, rules=rules, mesh=mesh)
             attn, new_topk = res.attn_out, res.topk_idx
             out["idx_k"] = idx_kc
             out["prev_topk"] = new_topk
+            if topk_valid is not None:
+                # a DSA step just wrote genuine feedback → rows become warm
+                out["topk_valid"] = jnp.ones_like(topk_valid)
+                out["sel_gvr"] = (res.gvr_rows if res.gvr_rows is not None
+                                  else jnp.ones_like(topk_valid))
         else:
             attn = decode_attention(q, kc, vc, new_len, scale=hd ** -0.5,
                                     window=cfg.swa_window)
             if idx_kc is not None:
                 out["idx_k"] = idx_kc
                 out["prev_topk"] = prev_topk
+                if topk_valid is not None:
+                    out["topk_valid"] = topk_valid
+                    out["sel_gvr"] = jnp.zeros_like(topk_valid)
         attn = attn.reshape(b, cfg.n_heads * hd).astype(x.dtype)
         x = x + attn @ p["wo"]
         h = rms_norm(x, p["ln2"])
@@ -333,6 +394,8 @@ def serve_step(params, state, tokens, cfg: ModelConfig, *, mesh=None,
     if cfg.dsa.enabled:
         carry_in["idx_k"] = state["idx_k"]
         carry_in["prev_topk"] = state["prev_topk"]
+        if "topk_valid" in state:
+            carry_in["topk_valid"] = state["topk_valid"]
     x, outs = jax.lax.scan(layer, x, carry_in)
 
     new_state = dict(state)
@@ -340,6 +403,9 @@ def serve_step(params, state, tokens, cfg: ModelConfig, *, mesh=None,
     if cfg.dsa.enabled:
         new_state["idx_k"] = outs["idx_k"]
         new_state["prev_topk"] = outs["prev_topk"]
+        if "topk_valid" in state:
+            new_state["topk_valid"] = outs["topk_valid"]
+            new_state["sel_gvr"] = outs["sel_gvr"]
     new_state["length"] = new_len
 
     x = rms_norm(x, params["final_norm"])

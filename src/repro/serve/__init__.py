@@ -1,0 +1,55 @@
+"""Continuous-batching GVR decode engine (serving layer).
+
+## The slot/tick model
+
+The engine owns a fixed pool of **B slots** — the batch dimension of every
+decode-state array (`models.api.Model.state_batch_axes` names the slot axis
+of each leaf). Requests flow through a per-slot lifecycle
+
+    QUEUED → PREFILL → DECODE → DONE
+
+managed by a `Scheduler` (FIFO or longest-context-first admission,
+`serve.scheduler`). One **tick** = one jitted `serve_step` over the whole
+ragged pool: every slot carries its own `length`, finished/idle slots are
+masked out by the engine's merge (their rows still flow through the jitted
+step — shapes stay static, so the step **never recompiles** — but their
+state is discarded; score rows beyond a slot's `length` are already dead
+via the `NEG_SENTINEL` masking convention in `core.gvr`/`sparse.dsa`).
+Freed slots are refilled mid-stream by **chunked prefill**: the admitted
+request's prompt streams through batch-1 `serve_step` chunks into its slot
+while the other slots keep decoding — no global pause.
+
+## Mapping to the paper's per-step Top-K feedback buffer
+
+The paper's `heuristic_prev_topk` HBM buffer (L × B × K int32, Appendix C)
+is the pool's `prev_topk` state: slot b's rows hold request b's previous
+step Top-K per layer, and every DSA step overwrites them with fresh
+feedback — GVR's temporal warm start (§3.1), amortized across whatever mix
+of requests occupies the pool. Continuous batching makes the buffer's
+*lifecycle* explicit (`serve.feedback_pool` over `core.temporal`):
+
+* **admission** re-seeds the slot's rows with the even-spacing prior over
+  the request's own prefix and drops `topk_valid` — a fresh request still
+  warm-starts Phase 1 (paper Table 9 row b), but its first selection
+  dispatches through the non-GVR fallback (row-level `canUseHeuristic`
+  false, Fig. 8) until genuine feedback lands, one tick later;
+* **eviction** poisons the rows (-1) so a recycled slot can never leak the
+  evicted request's indices into its successor.
+
+`DecodeEngine.method_log` records which selector path (`gvr` / `radix` /
+`exact` / `dense`) served each slot on each tick, straight from the
+selector's own per-row report (`SelectorOutput.gvr_rows`).
+"""
+
+from .engine import DecodeEngine, EngineReport, Request
+from .feedback_pool import FeedbackPool
+from .scheduler import (DECODE, DONE, PREFILL, QUEUED, FIFOScheduler,
+                        LongestContextFirstScheduler, Scheduler,
+                        make_scheduler)
+
+__all__ = [
+    "DecodeEngine", "EngineReport", "Request",
+    "FeedbackPool",
+    "Scheduler", "FIFOScheduler", "LongestContextFirstScheduler",
+    "make_scheduler", "QUEUED", "PREFILL", "DECODE", "DONE",
+]

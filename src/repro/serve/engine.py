@@ -1,0 +1,308 @@
+"""Continuous-batching decode engine over the model API.
+
+One `DecodeEngine` owns a fixed pool of B slots (the batch axis of the
+decode state). Per tick it:
+
+  1. admits queued requests into freed slots (scheduler policy), resetting
+     the slot's GVR feedback through the `FeedbackPool`;
+  2. streams one `prefill_chunk` of each PREFILL slot's prompt into the
+     pool via a batch-1 jitted chunk (other slots are untouched — they keep
+     decoding the same tick);
+  3. runs ONE jitted `serve_step` over the whole pool for the DECODE slots,
+     greedy-samples their next tokens, and merges the new state back only
+     for active rows — finished/idle/prefilling slots keep their state
+     bit-for-bit, and the step never recompiles (static shapes, masking
+     instead of shape changes, per the NEG_SENTINEL convention);
+  4. retires finished slots (eos or max_new_tokens), recycling their
+     feedback rows so no prediction survives into the next admission.
+
+Every served slot-tick is logged with the selector path that actually
+produced its Top-K (`gvr`/`radix`/`exact`, or `dense` before the DSA gate
+opens) — taken from the selector's own per-row report, not inferred.
+
+Bit-exactness: every per-slot computation in `serve_step` is row-parallel
+(attention, norms, projections act per batch row), so a request decoded in
+a busy pool produces bit-identical tokens to the same request decoded
+alone. Row-coupled families (MoE with shared expert capacity) void that
+guarantee; the engine targets the row-parallel decode families.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .feedback_pool import FeedbackPool
+from .scheduler import DECODE, DONE, PREFILL, QUEUED, Scheduler, make_scheduler
+
+
+@dataclasses.dataclass
+class Request:
+    uid: int
+    prompt: np.ndarray                 # (P,) int32 prompt tokens
+    max_new_tokens: int = 16
+    arrival: int = 0                   # tick at which the request may admit
+    # lifecycle bookkeeping (engine-owned)
+    phase: str = QUEUED
+    slot: Optional[int] = None
+    prefill_pos: int = 0
+    generated: List[int] = dataclasses.field(default_factory=list)
+    admitted_at: Optional[int] = None
+    finished_at: Optional[int] = None
+    logits_log: List[np.ndarray] = dataclasses.field(default_factory=list)
+
+    def __post_init__(self):
+        self.prompt = np.asarray(self.prompt, np.int32).reshape(-1)
+        if len(self.prompt) == 0:
+            raise ValueError(f"request {self.uid}: empty prompt")
+
+
+@dataclasses.dataclass
+class EngineReport:
+    ticks: int
+    wall_s: float
+    decoded_tokens: int
+    prefill_tokens: int
+    completed: int
+    method_counts: Dict[str, int]
+
+    @property
+    def tokens_per_s(self) -> float:
+        return self.decoded_tokens / self.wall_s if self.wall_s > 0 else 0.0
+
+    @property
+    def gvr_hit_rate(self) -> float:
+        total = sum(self.method_counts.values())
+        return self.method_counts.get("gvr", 0) / total if total else 0.0
+
+
+class DecodeEngine:
+    """Fixed-slot continuous-batching decode engine (see module docstring)."""
+
+    def __init__(self, model, params, *, num_slots: int, max_len: int,
+                 prefill_chunk: int = 8, scheduler="fifo",
+                 eos_id: Optional[int] = None, record_logits: bool = False):
+        axes = model.state_batch_axes()
+        if axes is None:
+            raise ValueError(f"model family {model.cfg.family!r} does not "
+                             f"expose slot-wise decode state")
+        self.model = model
+        self.params = params
+        self.cfg = model.cfg
+        self.num_slots = int(num_slots)
+        self.max_len = int(max_len)
+        self.prefill_chunk = int(prefill_chunk)
+        self.eos_id = eos_id
+        self.record_logits = record_logits
+        self._axes = axes
+        self.scheduler: Scheduler = (scheduler if isinstance(scheduler, Scheduler)
+                                     else make_scheduler(scheduler))
+        self.pool = FeedbackPool(model, self.num_slots)
+        self.state = model.init_decode_state(self.num_slots, self.max_len)
+
+        self.slots: List[Optional[Request]] = [None] * self.num_slots
+        self.tick_count = 0
+        self.decoded_tokens = 0
+        self.prefill_tokens = 0
+        self.completed: List[Request] = []
+        # per-request: [(tick, phase, method), ...] — which selector path
+        # served the request on each tick it was live
+        self.method_log: Dict[int, List[Tuple[int, str, str]]] = {}
+
+        cfg = self.cfg
+        self._use_dsa = bool(cfg.dsa.enabled) and self.max_len > cfg.dsa.min_n
+        # Static fallback method for cold rows, mirroring the selector's
+        # trace-time auto gate over n = max_len (selector.select_topk).
+        if not self._use_dsa:
+            self._cold_method = "dense"
+        elif cfg.dsa.selector != "auto":
+            self._cold_method = cfg.dsa.selector
+        else:
+            # auto + use_dsa implies max_len > min_n, so the selector's
+            # cold-row fallback is always radix (never the tiny-n exact path)
+            self._cold_method = "radix"
+
+        self._tick_fn = jax.jit(self._tick_impl)
+        self._prefill_fn = jax.jit(self._prefill_impl)
+
+    # ---- jitted kernels -------------------------------------------------
+
+    def _tick_impl(self, params, state, tokens, active):
+        """One pool-wide decode step; inactive rows keep their old state."""
+        logits, new_state = self.model.serve_step(params, state, tokens)
+        merged = {}
+        for key, arr in new_state.items():
+            ax = self._axes[key]
+            shape = [1] * arr.ndim
+            shape[ax] = self.num_slots
+            merged[key] = jnp.where(active.reshape(shape), arr, state[key])
+        next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return merged, next_tok, logits
+
+    def _slice_slot(self, state, slot):
+        return {k: jax.lax.dynamic_slice_in_dim(v, slot, 1, axis=self._axes[k])
+                for k, v in state.items()}
+
+    def _write_slot(self, state, sub, slot):
+        return {k: jax.lax.dynamic_update_slice_in_dim(
+                    state[k], sub[k], slot, axis=self._axes[k])
+                for k in state}
+
+    def _prefill_impl(self, params, state, tokens, slot, count):
+        """Stream `count` prompt tokens (of a fixed-size padded chunk) into
+        one slot, leaving every other slot untouched. Returns the updated
+        pool state, the next token implied by the last real prompt token,
+        and the per-token GVR-path mask for the method log."""
+        sub = self._slice_slot(state, slot)
+        vocab = self.cfg.vocab
+        logits0 = jnp.zeros((1, vocab), jnp.float32)
+
+        def body(carry, tok):
+            st, last_logits, i = carry
+            logits, st2 = self.model.serve_step(params, st, tok[None])
+            take = i < count
+            st = jax.tree.map(lambda new, old: jnp.where(take, new, old),
+                              st2, st)
+            last_logits = jnp.where(take, logits, last_logits)
+            gvr = (st2["sel_gvr"][0, 0] & take) if "sel_gvr" in st2 else \
+                jnp.asarray(False)
+            return (st, last_logits, i + 1), gvr
+
+        (sub, last_logits, _), gvr_steps = jax.lax.scan(
+            body, (sub, logits0, jnp.int32(0)), tokens)
+        state = self._write_slot(state, sub, slot)
+        next_tok = jnp.argmax(last_logits[0]).astype(jnp.int32)
+        return state, next_tok, gvr_steps, last_logits
+
+    # ---- host-side lifecycle --------------------------------------------
+
+    def submit(self, request: Request) -> None:
+        if len(request.prompt) + request.max_new_tokens > self.max_len:
+            raise ValueError(
+                f"request {request.uid}: prompt ({len(request.prompt)}) + "
+                f"max_new ({request.max_new_tokens}) exceeds max_len "
+                f"({self.max_len})")
+        self.method_log.setdefault(request.uid, [])
+        self.scheduler.submit(request)
+
+    def _log(self, req: Request, method: str) -> None:
+        self.method_log[req.uid].append((self.tick_count, req.phase, method))
+
+    def _method_name(self, gvr_row: bool) -> str:
+        return "gvr" if gvr_row else self._cold_method
+
+    def _admit(self) -> None:
+        for slot in range(self.num_slots):
+            if self.slots[slot] is not None:
+                continue
+            req = self.scheduler.pick(self.tick_count)
+            if req is None:
+                return
+            self.state = self.pool.admit(self.state, slot,
+                                         seq_len_hint=len(req.prompt))
+            req.slot, req.phase = slot, PREFILL
+            req.prefill_pos = 0
+            req.admitted_at = self.tick_count
+            self.slots[slot] = req
+
+    def _prefill_tick(self) -> None:
+        for req in list(self.slots):
+            if req is None or req.phase != PREFILL:
+                continue
+            chunk = req.prompt[req.prefill_pos:req.prefill_pos + self.prefill_chunk]
+            count = len(chunk)
+            padded = np.zeros((self.prefill_chunk,), np.int32)
+            padded[:count] = chunk
+            self.state, next_tok, gvr_steps, last_logits = self._prefill_fn(
+                self.params, self.state, jnp.asarray(padded),
+                req.slot, count)
+            # the tick's dispatch decision is made at tick entry — log the
+            # path that served the chunk's first token
+            self._log(req, self._method_name(bool(np.asarray(gvr_steps)[0])))
+            req.prefill_pos += count
+            self.prefill_tokens += count
+            if req.prefill_pos >= len(req.prompt):
+                # the last prompt token's logits yield the first generation
+                req.phase = DECODE
+                req.generated.append(int(next_tok))
+                if self.record_logits:
+                    req.logits_log.append(np.asarray(last_logits[0]))
+                self.decoded_tokens += 1
+                self._maybe_finish(req.slot)
+
+    def _decode_tick(self) -> None:
+        active = np.array([r is not None and r.phase == DECODE
+                           for r in self.slots])
+        if not active.any():
+            return
+        tokens = np.zeros((self.num_slots,), np.int32)
+        for s, req in enumerate(self.slots):
+            if active[s]:
+                tokens[s] = req.generated[-1]
+        self.state, next_tok, _logits = self._tick_fn(
+            self.params, self.state, jnp.asarray(tokens), jnp.asarray(active))
+        next_tok = np.asarray(next_tok)
+        sel_gvr = (np.asarray(self.state["sel_gvr"][0])
+                   if "sel_gvr" in self.state
+                   else np.zeros((self.num_slots,), bool))
+        for s, req in enumerate(self.slots):
+            if not active[s]:
+                continue
+            self._log(req, self._method_name(bool(sel_gvr[s])))
+            req.generated.append(int(next_tok[s]))
+            if self.record_logits:
+                req.logits_log.append(np.asarray(_logits[s]))
+            self.decoded_tokens += 1
+            self._maybe_finish(s)
+
+    def _maybe_finish(self, slot: int) -> None:
+        req = self.slots[slot]
+        if (len(req.generated) >= req.max_new_tokens
+                or (self.eos_id is not None
+                    and req.generated[-1] == self.eos_id)):
+            req.phase = DONE
+            req.finished_at = self.tick_count
+            self.state = self.pool.evict(self.state, slot)
+            self.slots[slot] = None
+            self.completed.append(req)
+
+    def tick(self) -> None:
+        """One engine tick: admit → chunked prefill → pool decode → retire."""
+        self._admit()
+        self._prefill_tick()
+        self._decode_tick()
+        self.tick_count += 1
+
+    def idle(self) -> bool:
+        return (all(r is None for r in self.slots)
+                and self.scheduler.pending() == 0)
+
+    def run(self, requests=None, max_ticks: int = 10_000) -> EngineReport:
+        """Drive until drained (or `max_ticks`). Returns throughput +
+        selector-path telemetry; per-request outputs live on the requests."""
+        for r in (requests or []):
+            self.submit(r)
+        t0 = time.perf_counter()
+        start_tick = self.tick_count
+        start_decoded = self.decoded_tokens
+        start_prefill = self.prefill_tokens
+        start_completed = len(self.completed)
+        while not self.idle() and self.tick_count - start_tick < max_ticks:
+            self.tick()
+        wall = time.perf_counter() - t0
+        # report THIS run's window only — the engine may be reused
+        counts: Dict[str, int] = {}
+        for entries in self.method_log.values():
+            for tick, _phase, method in entries:
+                if tick >= start_tick:
+                    counts[method] = counts.get(method, 0) + 1
+        return EngineReport(ticks=self.tick_count - start_tick, wall_s=wall,
+                            decoded_tokens=self.decoded_tokens - start_decoded,
+                            prefill_tokens=self.prefill_tokens - start_prefill,
+                            completed=len(self.completed) - start_completed,
+                            method_counts=counts)

@@ -69,6 +69,7 @@ class DSAOutput(NamedTuple):
     attn_out: jnp.ndarray      # (B, H, HD) f32
     topk_idx: jnp.ndarray      # (B, K) int32 — next step's prediction
     secant_iters: Optional[jnp.ndarray]
+    gvr_rows: Optional[jnp.ndarray] = None   # (B,) bool — selector path taken
 
 
 def dsa_sparse_attention(q: jnp.ndarray, kcache: jnp.ndarray, vcache: jnp.ndarray,
@@ -119,12 +120,18 @@ def dsa_decode(q: jnp.ndarray, kcache: jnp.ndarray, vcache: jnp.ndarray,
                prev_topk: jnp.ndarray, lengths: jnp.ndarray,
                *, k: int, scale: float, heads: int, dim: int,
                rope_base: float, selector: str = "auto",
+               prev_valid: Optional[jnp.ndarray] = None,
                max_candidates: Optional[int] = None,
                gate_max_n: int = 200_000,
                min_n: int = 4096,
                swa_window: Optional[int] = None, rules=None,
                mesh=None) -> DSAOutput:
-    """Full DSA decode step for one layer (indexer → select → sparse attn)."""
+    """Full DSA decode step for one layer (indexer → select → sparse attn).
+
+    `prev_valid` (B,) marks which rows carry genuine previous-step feedback;
+    under `selector="auto"` rows without it dispatch through the non-GVR
+    fallback (continuous-batching cold slots — see selector.select_topk).
+    """
     positions = lengths - 1
     scores = indexer_scores(indexer_params, x, idx_kcache, positions, lengths,
                             heads=heads, dim=dim, rope_base=rope_base,
@@ -134,9 +141,10 @@ def dsa_decode(q: jnp.ndarray, kcache: jnp.ndarray, vcache: jnp.ndarray,
         pos = jnp.arange(scores.shape[-1], dtype=jnp.int32)
         in_win = pos[None, :] > (lengths[:, None] - 1 - swa_window)
         scores = jnp.where(in_win, scores, NEG)
-    sel = select_topk(scores, k, prev_idx=prev_topk, method=selector,
+    sel = select_topk(scores, k, prev_idx=prev_topk, prev_valid=prev_valid,
+                      method=selector,
                       max_candidates=max_candidates, gate_max_n=gate_max_n,
                       min_n_for_selection=min_n, mesh=mesh)
     out = dsa_sparse_attention(q, kcache, vcache, sel.indices, lengths,
                                scale=scale, rules=rules)
-    return DSAOutput(out, sel.indices, sel.secant_iters)
+    return DSAOutput(out, sel.indices, sel.secant_iters, sel.gvr_rows)

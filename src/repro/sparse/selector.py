@@ -12,6 +12,20 @@ are static under jit) and the fallback chain is:
 
 `sp_gvr` selects the sequence-parallel distributed path (KV sharded rows);
 it is chosen explicitly by long-context configs, not by the auto gate.
+
+Continuous batching adds a *per-row* dimension to the gate: a serving batch
+mixes warm slots (genuine previous-step feedback) with cold ones (freshly
+admitted, prediction history reset). `prev_valid` (B,) carries that
+row-level `canUseHeuristic` signal; under `method="auto"` the selector then
+runs the GVR and radix paths and serves each row from its own path
+("mixed"). Both paths are exact with identical lowest-index tie policy, so
+outputs are row-for-row identical either way — the per-row dispatch is
+about cost fidelity (a cold row must not be billed/telemetered as a GVR
+hit) and about the feedback loop: `gvr_rows` reports which rows the GVR
+path actually served, which the serving engine logs per tick. A production
+kernel would partition the grid by row instead of computing both paths;
+at this layer SPMD static shapes make compute-both-and-select the honest
+equivalent (same semantics as a vmapped lax.cond).
 """
 
 from __future__ import annotations
@@ -29,10 +43,21 @@ class SelectorOutput(NamedTuple):
     values: jnp.ndarray          # (B, K) f32
     method: str                  # resolved method (trace-time)
     secant_iters: Optional[jnp.ndarray] = None
+    gvr_rows: Optional[jnp.ndarray] = None   # (B,) bool — rows the GVR path served
+
+
+def _masked_scores(scores, lengths):
+    if lengths is None:
+        return scores
+    n = scores.shape[-1]
+    pos = jnp.arange(n, dtype=jnp.int32)
+    return jnp.where(pos[None, :] < lengths[:, None], scores,
+                     jnp.float32(-3.4028235e38))
 
 
 def select_topk(scores: jnp.ndarray, k: int, *,
                 prev_idx: Optional[jnp.ndarray] = None,
+                prev_valid: Optional[jnp.ndarray] = None,
                 method: str = "auto",
                 lengths: Optional[jnp.ndarray] = None,
                 max_candidates: Optional[int] = None,
@@ -57,9 +82,11 @@ def select_topk(scores: jnp.ndarray, k: int, *,
             bspec = P(axes, None)
             has_prev = prev_idx is not None
             has_len = lengths is not None
+            has_valid = prev_valid is not None
 
-            def body(s_, l_, p_):
+            def body(s_, l_, p_, v_):
                 r = select_topk(s_, k, prev_idx=(p_ if has_prev else None),
+                                prev_valid=(v_ if has_valid else None),
                                 method=method, lengths=(l_ if has_len else None),
                                 max_candidates=max_candidates,
                                 gate_max_n=gate_max_n,
@@ -67,32 +94,41 @@ def select_topk(scores: jnp.ndarray, k: int, *,
                 it = r.secant_iters
                 if it is None:
                     it = jnp.zeros((s_.shape[0],), jnp.int32)
-                return r.indices, r.values, it
+                g = r.gvr_rows
+                if g is None:
+                    g = jnp.zeros((s_.shape[0],), bool)
+                return r.indices, r.values, it, g
 
-            idx, vals, iters = jax.shard_map(
+            from repro.parallel.sharding import shard_map as _shard_map
+            idx, vals, iters, gvr_rows = _shard_map(
                 body, mesh=mesh,
-                in_specs=(bspec,
-                          (P(axes) if lengths is not None else P(axes)),
-                          (bspec if prev_idx is not None else bspec)),
-                out_specs=(bspec, bspec, P(axes)),
+                in_specs=(bspec, P(axes), bspec, P(axes)),
+                out_specs=(bspec, bspec, P(axes), P(axes)),
                 check_vma=False,
             )(scores,
               lengths if lengths is not None else
               jnp.full((scores.shape[0],), scores.shape[-1], jnp.int32),
               prev_idx if prev_idx is not None else
-              jnp.zeros((scores.shape[0], 1), jnp.int32) - 1)
+              jnp.zeros((scores.shape[0], 1), jnp.int32) - 1,
+              prev_valid if prev_valid is not None else
+              jnp.ones((scores.shape[0],), bool))
             resolved = ("gvr" if (prev_idx is not None
                                   and scores.shape[-1] > min_n_for_selection
                                   and scores.shape[-1] <= gate_max_n)
                         else "sharded")
-            return SelectorOutput(idx, vals, resolved, iters)
+            if has_valid and resolved == "gvr":
+                resolved = "mixed"
+            return SelectorOutput(idx, vals, resolved, iters, gvr_rows)
 
     n = scores.shape[-1]
+    b = scores.shape[0]
     if method == "auto":
         if n <= min_n_for_selection:
             method = "exact"
         elif prev_idx is not None and n <= gate_max_n:
-            method = "gvr"                 # canUseHeuristic == true
+            # canUseHeuristic == true at trace time; a per-row validity
+            # signal refines the dispatch to row granularity ("mixed")
+            method = "gvr" if prev_valid is None else "mixed"
         else:
             method = "radix"               # fallback chain
 
@@ -101,22 +137,35 @@ def select_topk(scores: jnp.ndarray, k: int, *,
         stats = gvr_threshold(scores, prev_idx, k, lengths=lengths,
                               max_candidates=max_candidates)
         vals, idx = extract_topk(scores, stats.threshold, k, lengths=lengths)
-        return SelectorOutput(idx, vals, "gvr", stats.secant_iters)
+        return SelectorOutput(idx, vals, "gvr", stats.secant_iters,
+                              jnp.ones((b,), bool))
+    if method == "mixed":
+        assert prev_idx is not None, "mixed dispatch needs a prediction signal"
+        assert prev_valid is not None, "mixed dispatch needs prev_valid"
+        warm = prev_valid.astype(bool)
+        stats = gvr_threshold(scores, prev_idx, k, lengths=lengths,
+                              max_candidates=max_candidates)
+        g_vals, g_idx = extract_topk(scores, stats.threshold, k,
+                                     lengths=lengths)
+        r_vals, r_idx, st = radix_select_topk(_masked_scores(scores, lengths), k)
+        idx = jnp.where(warm[:, None], g_idx, r_idx)
+        vals = jnp.where(warm[:, None], g_vals, r_vals)
+        iters = jnp.where(warm, stats.secant_iters, st.passes)
+        return SelectorOutput(idx, vals, "mixed", iters, warm)
     if method == "radix":
-        x = scores
-        if lengths is not None:
-            pos = jnp.arange(n, dtype=jnp.int32)
-            x = jnp.where(pos[None, :] < lengths[:, None], x,
-                          jnp.float32(-3.4028235e38))
-        vals, idx, st = radix_select_topk(x, k)
-        return SelectorOutput(idx, vals, "radix", st.passes)
+        vals, idx, st = radix_select_topk(_masked_scores(scores, lengths), k)
+        return SelectorOutput(idx, vals, "radix", st.passes,
+                              jnp.zeros((b,), bool))
     if method == "exact":
-        x = scores
-        if lengths is not None:
-            pos = jnp.arange(n, dtype=jnp.int32)
-            x = jnp.where(pos[None, :] < lengths[:, None], x,
-                          jnp.float32(-3.4028235e38))
         import jax
-        vals, idx = jax.lax.top_k(x, k)
-        return SelectorOutput(idx.astype(jnp.int32), vals, "exact", None)
+        vals, idx = jax.lax.top_k(_masked_scores(scores, lengths), k)
+        # Canonical ascending-index order, like the extraction-based paths:
+        # downstream attention then sums gathered rows in the same order no
+        # matter which path served a row, so switching paths (warm/cold,
+        # auto-gate) can never perturb logits even in the last float bit.
+        order = jnp.argsort(idx, axis=-1)
+        idx = jnp.take_along_axis(idx, order, axis=-1)
+        vals = jnp.take_along_axis(vals, order, axis=-1)
+        return SelectorOutput(idx.astype(jnp.int32), vals, "exact", None,
+                              jnp.zeros((b,), bool))
     raise ValueError(f"unknown selector method {method!r}")

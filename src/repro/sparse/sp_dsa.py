@@ -68,8 +68,9 @@ def sp_dsa_decode_local(q, kc, vc, ikc, h, idx_params, prev_topk, lengths,
     nl = kc.shape[1]
     kvh = kc.shape[2]
     g = hl // kvh
+    from repro.parallel.sharding import axis_size
     my = jax.lax.axis_index(seq_axis)
-    d = jax.lax.axis_size(seq_axis)
+    d = axis_size(seq_axis)
     off = (my * nl).astype(jnp.int32)
 
     # -- 1. sequence-local cache write ---------------------------------
@@ -141,7 +142,8 @@ def make_sp_dsa(mesh, *, k: int, scale: float, heads: int, dim: int,
         return body(q, kc, vc, ikc, h, idx_params, prev_topk, lengths,
                     knew, vnew, iknew)
 
-    return jax.shard_map(
+    from repro.parallel.sharding import shard_map
+    return shard_map(
         fn, mesh=mesh,
         in_specs=(hspec, kv_spec, kv_spec, P(None, seq_axis, None),
                   P(None, None), P(), P(None, None), P(None),

@@ -1,0 +1,113 @@
+"""Hypothesis shim: real `hypothesis` when installed, otherwise a small
+deterministic seeded-examples fallback.
+
+The fallback implements exactly the API surface the test-suite uses —
+`given`, `settings`, and the strategies `integers`, `floats`,
+`sampled_from`, `booleans`, `data` — by drawing `max_examples` pseudo-random
+examples from a per-test seeded `numpy` generator. It trades hypothesis'
+shrinking and coverage-guided search for zero dependencies: the suite still
+exercises the same parameter space, reproducibly, on a clean interpreter.
+
+Usage in tests (identical under both backends):
+
+    from _hypothesis_compat import given, settings, st
+"""
+
+from __future__ import annotations
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:                                    # pragma: no cover
+    import zlib
+
+    import numpy as np
+
+    HAVE_HYPOTHESIS = False
+    _DEFAULT_MAX_EXAMPLES = 25
+
+    class _Strategy:
+        def __init__(self, draw):
+            self._draw = draw
+
+        def sample(self, rng):
+            return self._draw(rng)
+
+    class _DataStrategy(_Strategy):
+        """Marker for `st.data()` — resolved to a _DataObject per example."""
+
+        def __init__(self):
+            super().__init__(lambda rng: None)
+
+    class _DataObject:
+        def __init__(self, rng):
+            self._rng = rng
+
+        def draw(self, strategy, label=None):
+            return strategy.sample(self._rng)
+
+    class _Strategies:
+        @staticmethod
+        def integers(min_value, max_value):
+            return _Strategy(lambda rng: int(rng.integers(min_value,
+                                                          max_value + 1)))
+
+        @staticmethod
+        def floats(min_value, max_value, **kw):
+            return _Strategy(lambda rng: float(rng.uniform(min_value,
+                                                           max_value)))
+
+        @staticmethod
+        def sampled_from(elements):
+            elems = list(elements)
+            return _Strategy(lambda rng: elems[int(rng.integers(len(elems)))])
+
+        @staticmethod
+        def booleans():
+            return _Strategy(lambda rng: bool(rng.integers(2)))
+
+        @staticmethod
+        def data():
+            return _DataStrategy()
+
+    st = _Strategies()
+
+    def settings(max_examples=_DEFAULT_MAX_EXAMPLES, **_ignored):
+        """Fallback `settings`: only `max_examples` is honored (deadline &
+        friends are hypothesis-runtime concerns that don't apply here)."""
+        def deco(fn):
+            fn._compat_max_examples = max_examples
+            return fn
+        return deco
+
+    def given(**strategies):
+        def deco(fn):
+            def runner():
+                n = getattr(runner, "_compat_max_examples",
+                            _DEFAULT_MAX_EXAMPLES)
+                # Stable per-test seed: same examples every run, different
+                # tests explore different points.
+                base = zlib.crc32(fn.__qualname__.encode())
+                for i in range(n):
+                    rng = np.random.default_rng((base, i))
+                    kwargs = {}
+                    for name, strat in strategies.items():
+                        if isinstance(strat, _DataStrategy):
+                            kwargs[name] = _DataObject(rng)
+                        else:
+                            kwargs[name] = strat.sample(rng)
+                    try:
+                        fn(**kwargs)
+                    except Exception as e:
+                        raise AssertionError(
+                            f"falsifying example (compat shim, example "
+                            f"{i}/{n}): {kwargs!r}") from e
+            # No functools.wraps: pytest must see a zero-arg signature, not
+            # the strategy parameters (it would demand fixtures for them).
+            runner.__name__ = fn.__name__
+            runner.__doc__ = fn.__doc__
+            runner.__module__ = fn.__module__
+            runner.__qualname__ = fn.__qualname__
+            return runner
+        return deco

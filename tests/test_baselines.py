@@ -4,7 +4,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core.topk_baselines import (exact_topk, radix_select_topk, sort_topk,
                                        _float_to_sortable_u32,

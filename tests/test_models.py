@@ -82,24 +82,30 @@ def test_arch_loss_decreases(arch):
 
 def test_dsa_feedback_improves_overlap():
     """After enough decode steps, consecutive Top-K sets overlap far above
-    the random baseline (paper Fig. 3 behavior, toy scale)."""
+    the random baseline (paper Fig. 3 behavior, toy scale).
+
+    The decode is greedy and self-feeding — the paper's temporal-correlation
+    claim is about autoregressive decode traffic, where consecutive queries
+    are correlated. (Teacher-forcing i.i.d. random tokens destroys exactly
+    the signal under test: each step then queries with an unrelated
+    embedding and the overlap collapses to — or below — chance.)"""
     from repro.core.temporal import hit_ratio
     cfg = get_config("llama3.2-1b", smoke=True)
     model = build_model(cfg)
     params = model.init_params(jax.random.PRNGKey(2))
     b, max_len = 2, 96
     state = model.init_decode_state(batch=b, max_len=max_len)
-    toks = jnp.asarray(RNG.integers(0, cfg.vocab, (40, b)), jnp.int32)
+    step = jax.jit(lambda p, s, tk: model.serve_step(p, s, tk))
 
+    tok = jnp.asarray(RNG.integers(0, cfg.vocab, (b,)), jnp.int32)
     prevs = []
     for t in range(40):
-        logits, state = jax.jit(
-            lambda p, s, tk: model.serve_step(p, s, tk))(params, state, toks[t])
+        logits, state = step(params, state, tok)
+        tok = jnp.argmax(logits, -1).astype(jnp.int32)   # greedy self-feed
         prevs.append(np.asarray(state["prev_topk"][0]))   # layer 0
     k = prevs[-1].shape[-1]
-    n = max_len
     hr = float(np.mean(np.asarray(hit_ratio(
-        jnp.asarray(prevs[-1]), jnp.asarray(prevs[-2]), n))))
+        jnp.asarray(prevs[-1]), jnp.asarray(prevs[-2]), max_len))))
     # with a 40-token cache and k=16 the random baseline is k/len = 0.4;
     # temporal correlation must clear it (toy scale: margin is modest)
     assert hr > (k / 40) + 0.05, hr

@@ -1,0 +1,131 @@
+"""Property-based selector dispatch tests (paper Fig. 8 / §5.5).
+
+PROPERTY: for any finite scores, any lengths, any k and any prediction
+state — warm, cold, or a per-row mix — every dispatch path returns the
+exact Top-K set of `lax.top_k` under the lowest-index tie policy.
+
+Runs under real `hypothesis` when installed, else the deterministic
+seeded-examples shim (tests/_hypothesis_compat.py).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from _hypothesis_compat import given, settings, st
+
+from repro.sparse.selector import select_topk
+
+NEG = np.float32(-3.4028235e38)
+
+
+def _expected_topk_idx(x_masked: np.ndarray, k: int) -> np.ndarray:
+    """Exact Top-K indices, lowest-index-first on ties: stable argsort on
+    descending value keeps the smaller index ahead of an equal value."""
+    order = np.argsort(-x_masked, axis=-1, kind="stable")
+    return np.sort(order[:, :k], axis=-1)
+
+
+def _scores(rng, b, n, dist):
+    if dist == "normal":
+        x = rng.normal(size=(b, n)) * 10 ** rng.uniform(-6, 6)
+    elif dist == "heavy":
+        x = rng.standard_cauchy(size=(b, n)).clip(-1e37, 1e37)
+    elif dist == "ties":
+        x = rng.integers(-4, 4, size=(b, n)).astype(float)
+    else:  # const — everything ties
+        x = np.full((b, n), float(rng.normal()))
+    return x.astype(np.float32)
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    n=st.integers(32, 512),
+    k_frac=st.floats(0.02, 0.98),
+    dist=st.sampled_from(["normal", "heavy", "ties", "const"]),
+    method=st.sampled_from(["gvr", "radix", "exact", "auto"]),
+    ragged=st.booleans(),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_property_all_paths_exact_topk(n, k_frac, dist, method, ragged, seed):
+    rng = np.random.default_rng(seed)
+    b = 3
+    k = max(1, int(n * k_frac))
+    x = _scores(rng, b, n, dist)
+    lengths = (rng.integers(1, n + 1, (b,)).astype(np.int32)
+               if ragged else None)
+    m = max(k, 8)
+    prev = rng.integers(0, n, (b, m)).astype(np.int32)
+
+    out = select_topk(jnp.asarray(x), k,
+                      prev_idx=jnp.asarray(prev),
+                      method=method,
+                      lengths=(None if lengths is None
+                               else jnp.asarray(lengths)),
+                      min_n_for_selection=64)
+
+    xm = x.copy()
+    if lengths is not None:
+        xm[np.arange(n)[None, :] >= lengths[:, None]] = NEG
+    want_idx = _expected_topk_idx(xm, k)
+    got_idx = np.sort(np.asarray(out.indices), axis=-1)
+    np.testing.assert_array_equal(got_idx, want_idx, err_msg=out.method)
+    # values must be the gathered scores at those indices
+    np.testing.assert_array_equal(
+        np.sort(np.asarray(out.values), -1),
+        np.sort(np.take_along_axis(xm, want_idx, -1), -1))
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    n=st.integers(128, 512),
+    k_frac=st.floats(0.02, 0.5),
+    dist=st.sampled_from(["normal", "ties", "const"]),
+    ragged=st.booleans(),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_property_mixed_warm_cold_rows(n, k_frac, dist, ragged, seed):
+    """Per-row dispatch: a batch mixing warm and cold slots must (a) stay
+    exact on every row, (b) report exactly the warm rows as GVR-served."""
+    rng = np.random.default_rng(seed)
+    b = 4
+    k = max(1, int(n * k_frac))
+    x = _scores(rng, b, n, dist)
+    lengths = (rng.integers(k, n + 1, (b,)).astype(np.int32)
+               if ragged else None)
+    prev = rng.integers(0, n, (b, max(k, 8))).astype(np.int32)
+    valid = rng.integers(0, 2, (b,)).astype(bool)
+
+    out = select_topk(jnp.asarray(x), k,
+                      prev_idx=jnp.asarray(prev),
+                      prev_valid=jnp.asarray(valid),
+                      method="auto",
+                      lengths=(None if lengths is None
+                               else jnp.asarray(lengths)),
+                      min_n_for_selection=64, gate_max_n=10**6)
+
+    assert out.method == "mixed"
+    np.testing.assert_array_equal(np.asarray(out.gvr_rows), valid)
+    xm = x.copy()
+    if lengths is not None:
+        xm[np.arange(n)[None, :] >= lengths[:, None]] = NEG
+    want_idx = _expected_topk_idx(xm, k)
+    np.testing.assert_array_equal(np.sort(np.asarray(out.indices), -1),
+                                  want_idx)
+
+
+def test_mixed_requires_auto_gate():
+    """Explicit methods ignore prev_valid (forced path), and the auto gate
+    still resolves all-or-nothing when no validity signal is given."""
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=(2, 256)).astype(np.float32))
+    prev = jnp.asarray(rng.integers(0, 256, (2, 16)).astype(np.int32))
+    valid = jnp.asarray(np.array([True, False]))
+    out = select_topk(x, 8, prev_idx=prev, prev_valid=valid, method="gvr")
+    assert out.method == "gvr" and bool(np.asarray(out.gvr_rows).all())
+    out = select_topk(x, 8, prev_idx=prev, method="auto",
+                      min_n_for_selection=64)
+    assert out.method == "gvr"
+    out = select_topk(x, 8, prev_idx=prev, prev_valid=valid, method="auto",
+                      min_n_for_selection=64)
+    assert out.method == "mixed"

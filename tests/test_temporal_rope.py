@@ -5,8 +5,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import (compute_static_pre_idx, g_delta, generate_indexer_scores,
-                        hit_ratio, init_feedback, shifted_hit_ratio,
-                        update_feedback, yarn_inv_freq)
+                        hit_ratio, init_feedback, recycle_slot, reset_slot,
+                        seed_slot_idx, shifted_hit_ratio, update_feedback,
+                        yarn_inv_freq)
 
 
 def test_g_delta_peak_at_zero():
@@ -62,6 +63,39 @@ def test_feedback_state():
     assert not bool(fb.valid.any())
     fb = update_feedback(fb, 1, jnp.ones((2, 8), jnp.int32))
     assert bool(fb.valid[1].all()) and not bool(fb.valid[0].any())
+
+
+def test_feedback_slot_recycle_then_reset():
+    """Regression (serving lifecycle): evict → admit on the same slot must
+    leave zero trace of the evicted request's prediction indices."""
+    fb = init_feedback(num_layers=2, batch=3, k=4, seq_len_hint=100)
+    # request A decodes in slot 1 with high (long-context) indices
+    a_idx = jnp.asarray(np.tile([90, 91, 95, 99], (3, 1)), jnp.int32)
+    for layer in range(2):
+        fb = update_feedback(fb, layer, a_idx)
+    assert bool(fb.valid.all())
+
+    fb = recycle_slot(fb, 1)                       # evict A
+    assert np.all(np.asarray(fb.prev_idx[:, 1]) == -1)   # poisoned
+    assert not np.any(np.asarray(fb.valid[:, 1]))
+    # other slots untouched
+    for layer in range(2):
+        np.testing.assert_array_equal(np.asarray(fb.prev_idx[layer, 0]),
+                                      [90, 91, 95, 99])
+        assert bool(fb.valid[layer, 0])
+
+    fb = reset_slot(fb, 1, seq_len_hint=10)        # admit B (prefix of 10)
+    seeded = np.asarray(fb.prev_idx[:, 1])
+    assert seeded.min() >= 0 and seeded.max() < 10  # within B's own prefix
+    assert not np.any(np.asarray(fb.valid[:, 1]))   # cold until real feedback
+    # A's indices (>= 90) appear nowhere in the recycled slot
+    assert not np.isin(np.asarray(a_idx[0]), seeded).any()
+
+
+def test_seed_slot_idx_even_spacing():
+    s = np.asarray(seed_slot_idx(4, seq_len_hint=100))
+    assert s[0] == 0 and s[-1] == 99 and np.all(np.diff(s) > 0)
+    assert np.array_equal(np.asarray(seed_slot_idx(3)), [0, 1, 2])
 
 
 def test_static_pre_idx_shape_and_range():
