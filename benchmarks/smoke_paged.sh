@@ -1,0 +1,20 @@
+#!/usr/bin/env sh
+# Tier-2 smoke: run the paged-engine benchmark section on CPU.
+#
+#   ./benchmarks/smoke_paged.sh
+#
+# Exercises the full paged path end to end (admission, shared-prefix
+# reuse, equal-memory 2x-slots capacity assertions) and leaves
+# BENCH_paged.json in the repo root. Exits non-zero if the benchmark's
+# built-in acceptance asserts fail or the section errors.
+set -eu
+cd "$(dirname "$0")/.."
+export JAX_PLATFORMS="${JAX_PLATFORMS:-cpu}"
+PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" python -m benchmarks.run paged | tee /tmp/paged_bench.out
+# benchmarks/run.py swallows section exceptions into */ERROR rows — fail on them
+if grep -q "ERROR" /tmp/paged_bench.out; then
+    echo "paged benchmark reported an error" >&2
+    exit 1
+fi
+test -f BENCH_paged.json
+echo "paged smoke OK"

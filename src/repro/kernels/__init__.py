@@ -3,10 +3,12 @@
 - gvr_topk      : fused Guess-Verify-Refine exact Top-K (VMEM-resident row)
 - indexer_topk  : fused indexer scoring + GVR (scores never touch HBM)
 - sparse_attn   : Top-K gathered decode attention (scalar-prefetch gather)
+- paged_gather  : block-table KV gather for the paged serving layout
+                  (scalar-prefetched table, one page tile per DMA)
 
 ops.py exposes the jit'd wrappers; ref.py the pure-jnp oracles.
 """
 
-from .ops import gvr_topk, indexer_topk, sparse_decode_attn
+from .ops import gvr_topk, indexer_topk, paged_gather, sparse_decode_attn
 
-__all__ = ["gvr_topk", "indexer_topk", "sparse_decode_attn"]
+__all__ = ["gvr_topk", "indexer_topk", "paged_gather", "sparse_decode_attn"]

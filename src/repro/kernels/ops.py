@@ -16,6 +16,7 @@ import jax.numpy as jnp
 
 from .gvr_topk import DEFAULT_CHUNK, gvr_topk_pallas
 from .indexer_topk import indexer_topk_pallas
+from .paged_gather import paged_gather_pallas
 from .sparse_attn import sparse_decode_attn_pallas
 
 NEG = -3.4028235e38
@@ -82,6 +83,27 @@ def indexer_topk(q: jnp.ndarray, kcache: jnp.ndarray, w: jnp.ndarray,
     return indexer_topk_pallas(q, kcache, w, prev_idx, k, lengths=lengths,
                                kv_chunk=kv_chunk, chunk=chunk,
                                interpret=interpret)
+
+
+@partial(jax.jit, static_argnames=("interpret",))
+def paged_gather(pages: jnp.ndarray, table: jnp.ndarray,
+                 *, interpret: bool = True):
+    """Contiguous logical KV view from a paged pool (Pallas DMA gather).
+
+    pages: (P, page_size, ...) — any trailing feature dims (KV heads × head
+    dim, indexer dim, ...); table: (B, MP) int32 block table, -1 = unmapped
+    (zero rows). Returns (B, MP * page_size, ...) — the logical view
+    `serve_step_paged` consumes (there via the equivalent XLA gather).
+    """
+    p, page_size = pages.shape[:2]
+    feat = pages.shape[2:]
+    d = 1
+    for f in feat:
+        d *= f
+    b, mp = table.shape
+    out = paged_gather_pallas(pages.reshape(p, page_size, d),
+                              table.astype(jnp.int32), interpret=interpret)
+    return out.reshape((b, mp * page_size) + feat)
 
 
 @partial(jax.jit, static_argnames=("scale", "gather_block", "gather_mode",

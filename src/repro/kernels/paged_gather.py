@@ -1,0 +1,63 @@
+"""Pallas TPU kernel: paged KV gather (block table → contiguous logical view).
+
+The paged decode hot spot: reassemble one slot's KV rows from the global
+page pool into the contiguous logical view the attention/Top-K stages
+consume. The block table is *scalar-prefetched* (PrefetchScalarGridSpec,
+same technique as sparse_attn's Top-K gather): the BlockSpec index_map
+reads `table[b, m]` to address the next physical page, so the DMA engine
+itself performs the logical→physical translation — one contiguous
+(page_size × D) tile per table entry, no per-token scatter. Unmapped
+entries (-1) land as zero tiles (they are dead beyond `length` under the
+NEG_SENTINEL masking convention anyway; zeroing makes the op's contract
+layout-independent).
+
+This is the per-device hot-spot form; the model layer's `serve_step_paged`
+uses the equivalent XLA gather (`pages[clip(table)]`) which the dry-run
+lowers — ref.py's `paged_gather_ref` is the shared oracle for both.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _gather_kernel(table_ref, pages_ref, o_ref):
+    b = pl.program_id(0)
+    m = pl.program_id(1)
+    mapped = table_ref[b, m] >= 0
+    tile = pages_ref[0]                                  # (page_size, D)
+    o_ref[0, 0] = jnp.where(mapped, tile, jnp.zeros_like(tile))
+
+
+def paged_gather_pallas(pages: jnp.ndarray, table: jnp.ndarray,
+                        *, interpret: bool = True) -> jnp.ndarray:
+    """pages: (P, page_size, D); table: (B, MP) int32 (-1 = unmapped).
+
+    Returns (B, MP, page_size, D): row [b, m] is physical page table[b, m]
+    (zeros when unmapped). The caller reshapes to the (B, MP * page_size, D)
+    logical view.
+    """
+    p, page_size, d = pages.shape
+    b, mp = table.shape
+    table = table.astype(jnp.int32)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(b, mp),
+        in_specs=[
+            # the DMA gather: block row index = prefetched table entry
+            pl.BlockSpec((1, page_size, d),
+                         lambda i, j, t_ref: (jnp.maximum(t_ref[i, j], 0), 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, page_size, d),
+                               lambda i, j, t_ref: (i, j, 0, 0)),
+    )
+    out_shape = jax.ShapeDtypeStruct((b, mp, page_size, d), pages.dtype)
+    kern = functools.partial(_gather_kernel)
+    return pl.pallas_call(kern, grid_spec=grid_spec, out_shape=out_shape,
+                          interpret=interpret)(table, pages)

@@ -30,6 +30,17 @@ def indexer_scores_ref(q: jnp.ndarray, kcache: jnp.ndarray, w: jnp.ndarray,
     return out
 
 
+def paged_gather_ref(pages: jnp.ndarray, table: jnp.ndarray) -> jnp.ndarray:
+    """Paged KV gather oracle: logical view from a page pool + block table.
+
+    pages: (P, page_size, D); table: (B, MP) int32, -1 = unmapped (zeros in
+    the output). Returns (B, MP, page_size, D).
+    """
+    safe = jnp.clip(table, 0, pages.shape[0] - 1)
+    out = pages[safe]                                     # (B, MP, ps, D)
+    return jnp.where((table >= 0)[:, :, None, None], out, 0)
+
+
 def sparse_decode_attn_ref(q: jnp.ndarray, kcache: jnp.ndarray, vcache: jnp.ndarray,
                            idx: jnp.ndarray, counts=None, scale=None):
     """Sparse decode attention oracle: attend only over gathered Top-K rows.

@@ -73,6 +73,34 @@ class Model:
                 f"family {self.cfg.family!r} has no slot-wise state recycle")
         return fn(self.cfg, state, slot)
 
+    # ---- paged decode-state variant (serve.paged subsystem) -------------
+    def init_paged_decode_state(self, batch, max_len, *, num_pages, page_size,
+                                dtype=None):
+        """Paged KV layout: pool-of-pages caches + per-slot page tables.
+        Raises for families without a paged decode path."""
+        fn = getattr(self.mod, "init_paged_decode_state", None)
+        if fn is None:
+            raise NotImplementedError(
+                f"family {self.cfg.family!r} has no paged decode state")
+        return fn(self.cfg, batch, max_len, num_pages=num_pages,
+                  page_size=page_size, dtype=dtype)
+
+    def paged_state_batch_axes(self) -> Optional[Dict[str, int]]:
+        """Slot-axis map of the paged decode-state leaves (page-pool leaves
+        are absent — they are pool-global), or None when the family has no
+        paged decode path."""
+        fn = getattr(self.mod, "paged_state_batch_axes", None)
+        return fn(self.cfg) if fn is not None else None
+
+    def serve_step_paged(self, params, state, tokens, *, min_write_pos=None,
+                         mesh=None, rules=None):
+        fn = getattr(self.mod, "serve_step_paged", None)
+        if fn is None:
+            raise NotImplementedError(
+                f"family {self.cfg.family!r} has no paged serve_step")
+        return fn(params, state, tokens, self.cfg,
+                  min_write_pos=min_write_pos, mesh=mesh, rules=rules)
+
     def serve_step(self, params, state, tokens, *, mesh=None, rules=None,
                    seq_sharded: bool = False):
         if self.cfg.family == "hybrid":

@@ -302,6 +302,63 @@ def _write_row(cache, new, lengths):
     return jax.vmap(one)(cache, new.astype(cache.dtype), lengths)
 
 
+def _project_qkv(p, h, b, positions, cfg: ModelConfig, rules):
+    """Per-layer decode projections + RoPE, shared by the dense and paged
+    cache layouts. h: (B, D) normed input. Returns q (B,H,HD), kn (B,KVH,HD),
+    vn (B,KVH,HD) — the new token's rows, ready for the cache write."""
+    hd = cfg.hd
+    q = (h @ p["wq"]).reshape(b, 1, cfg.n_heads, hd)
+    kn = (h @ p["wk"]).reshape(b, 1, cfg.n_kv_heads, hd)
+    vn = (h @ p["wv"]).reshape(b, 1, cfg.n_kv_heads, hd)
+    q = apply_rotary(q, positions[:, None], kind=cfg.rope_kind,
+                     base=cfg.rope_base, fraction=cfg.rope_fraction)[:, 0]
+    kn = apply_rotary(kn, positions[:, None], kind=cfg.rope_kind,
+                      base=cfg.rope_base, fraction=cfg.rope_fraction)[:, 0]
+    kn = constrain(kn, rules, "batch", None, None)
+    vn = constrain(vn[:, 0], rules, "batch", None, None)
+    return q, kn, vn
+
+
+def _attend_decode(p, h, q, kc, vc, idx_kc, prev_topk, topk_valid, new_len,
+                   cfg: ModelConfig, use_dsa: bool, rules, mesh):
+    """Shared decode-attention core over a *logical* contiguous cache view.
+
+    Identical for both cache layouts: the dense layout passes its cache rows
+    directly, the paged layout passes the page-gathered view. Everything
+    downstream of this point — indexer scores, Top-K selection, the
+    prev-Top-K feedback and the sel_gvr telemetry — therefore lives in
+    logical token space and never sees a physical page id (the layout
+    invariant GVR's temporal prediction depends on)."""
+    hd = cfg.hd
+    out = {}
+    if use_dsa:
+        res = dsa_mod.dsa_decode(
+            q, kc, vc, p["indexer"], h, idx_kc, prev_topk, new_len,
+            k=prev_topk.shape[-1], scale=hd ** -0.5,
+            heads=cfg.dsa.indexer_heads, dim=cfg.dsa.indexer_dim,
+            rope_base=cfg.rope_base, selector=cfg.dsa.selector,
+            prev_valid=topk_valid,
+            max_candidates=cfg.dsa.max_candidates,
+            gate_max_n=cfg.dsa.gate_max_n, min_n=cfg.dsa.min_n,
+            swa_window=cfg.swa_window, rules=rules, mesh=mesh)
+        attn = res.attn_out
+        out["prev_topk"] = res.topk_idx
+        if topk_valid is not None:
+            # a DSA step just wrote genuine feedback → rows become warm
+            out["topk_valid"] = jnp.ones_like(topk_valid)
+            out["sel_gvr"] = (res.gvr_rows if res.gvr_rows is not None
+                              else jnp.ones_like(topk_valid))
+    else:
+        attn = decode_attention(q, kc, vc, new_len, scale=hd ** -0.5,
+                                window=cfg.swa_window)
+        if prev_topk is not None:
+            out["prev_topk"] = prev_topk
+            if topk_valid is not None:
+                out["topk_valid"] = topk_valid
+                out["sel_gvr"] = jnp.zeros_like(topk_valid)
+    return attn, out
+
+
 def serve_step(params, state, tokens, cfg: ModelConfig, *, mesh=None,
                rules: Optional[MeshRules] = None):
     """One decode step. tokens: (B,) int32. Returns (logits (B,V), state).
@@ -333,17 +390,9 @@ def serve_step(params, state, tokens, cfg: ModelConfig, *, mesh=None,
         if idx_kc is not None:
             idx_kc = constrain(idx_kc, rules, "batch", None, None)
         h = rms_norm(x, p["ln1"])
-        q = (h @ p["wq"]).reshape(b, 1, cfg.n_heads, hd)
-        kn = (h @ p["wk"]).reshape(b, 1, cfg.n_kv_heads, hd)
-        vn = (h @ p["wv"]).reshape(b, 1, cfg.n_kv_heads, hd)
-        q = apply_rotary(q, positions[:, None], kind=cfg.rope_kind,
-                         base=cfg.rope_base, fraction=cfg.rope_fraction)[:, 0]
-        kn = apply_rotary(kn, positions[:, None], kind=cfg.rope_kind,
-                          base=cfg.rope_base, fraction=cfg.rope_fraction)[:, 0]
-        kn = constrain(kn, rules, "batch", None, None)
-        vn = constrain(vn, rules, "batch", None, None, None)
+        q, kn, vn = _project_qkv(p, h, b, positions, cfg, rules)
         kc = _write_row(kc, kn, positions)
-        vc = _write_row(vc, vn[:, 0] if vn.ndim == 4 else vn, positions)
+        vc = _write_row(vc, vn, positions)
         kc = constrain(kc, rules, "batch", None, None, None)
         vc = constrain(vc, rules, "batch", None, None, None)
 
@@ -353,32 +402,12 @@ def serve_step(params, state, tokens, cfg: ModelConfig, *, mesh=None,
                                    dim=cfg.dsa.indexer_dim,
                                    rope_base=cfg.rope_base)
             idx_kc = _write_row(idx_kc, ik, positions)
-            res = dsa_mod.dsa_decode(
-                q, kc, vc, p["indexer"], h, idx_kc, prev_topk, new_len,
-                k=prev_topk.shape[-1], scale=hd ** -0.5,
-                heads=cfg.dsa.indexer_heads, dim=cfg.dsa.indexer_dim,
-                rope_base=cfg.rope_base, selector=cfg.dsa.selector,
-                prev_valid=topk_valid,
-                max_candidates=cfg.dsa.max_candidates,
-                gate_max_n=cfg.dsa.gate_max_n, min_n=cfg.dsa.min_n,
-                swa_window=cfg.swa_window, rules=rules, mesh=mesh)
-            attn, new_topk = res.attn_out, res.topk_idx
+        if idx_kc is not None:
             out["idx_k"] = idx_kc
-            out["prev_topk"] = new_topk
-            if topk_valid is not None:
-                # a DSA step just wrote genuine feedback → rows become warm
-                out["topk_valid"] = jnp.ones_like(topk_valid)
-                out["sel_gvr"] = (res.gvr_rows if res.gvr_rows is not None
-                                  else jnp.ones_like(topk_valid))
-        else:
-            attn = decode_attention(q, kc, vc, new_len, scale=hd ** -0.5,
-                                    window=cfg.swa_window)
-            if idx_kc is not None:
-                out["idx_k"] = idx_kc
-                out["prev_topk"] = prev_topk
-                if topk_valid is not None:
-                    out["topk_valid"] = topk_valid
-                    out["sel_gvr"] = jnp.zeros_like(topk_valid)
+        attn, extras = _attend_decode(p, h, q, kc, vc, idx_kc, prev_topk,
+                                      topk_valid, new_len, cfg, use_dsa,
+                                      rules, mesh)
+        out.update(extras)
         attn = attn.reshape(b, cfg.n_heads * hd).astype(x.dtype)
         x = x + attn @ p["wo"]
         h = rms_norm(x, p["ln2"])
@@ -402,6 +431,185 @@ def serve_step(params, state, tokens, cfg: ModelConfig, *, mesh=None,
     new_state["k"], new_state["v"] = outs["k"], outs["v"]
     if cfg.dsa.enabled:
         new_state["idx_k"] = outs["idx_k"]
+        new_state["prev_topk"] = outs["prev_topk"]
+        if "topk_valid" in state:
+            new_state["topk_valid"] = outs["topk_valid"]
+            new_state["sel_gvr"] = outs["sel_gvr"]
+    new_state["length"] = new_len
+
+    x = rms_norm(x, params["final_norm"])
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = (x @ head).astype(jnp.float32)
+    return constrain(logits, rules, "batch", "vocab"), new_state
+
+
+# --------------------------------------------------------------------------
+# Paged decode (serve) path — pool-of-pages KV layout
+# --------------------------------------------------------------------------
+#
+# The paged layout replaces the dense per-slot (B, max_len, ...) caches with
+# a global pool of `num_pages` pages of `page_size` tokens plus a per-slot
+# page table translating logical token positions to physical pages
+# (serve.paged owns allocation, ref-counts and shared-prefix admission).
+# Each step scatters the new token's K/V (and indexer-K) rows into the
+# slot's current page, gathers the slot's pages back into a contiguous
+# *logical* view, and runs the exact same `_attend_decode` core as the
+# dense layout — so Top-K indices, the prev-Top-K feedback buffer and all
+# selector telemetry stay in logical token space, and a request decodes
+# bit-identically under either layout. All shapes are static: the tick
+# never recompiles across admissions, evictions or page-table changes.
+
+# min_write_pos sentinel larger than any position: the row never writes.
+# Rows whose write is masked (inactive slots, shared-prefix replay over
+# already-materialized pages) scatter into a dedicated sink page instead —
+# that keeps the scatter shape static and shared pages copy-free.
+PAGED_NEVER_WRITE = 2 ** 30
+
+
+def init_paged_decode_state(cfg: ModelConfig, batch: int, max_len: int, *,
+                            num_pages: int, page_size: int,
+                            dtype=None) -> Dict[str, jnp.ndarray]:
+    """Paged decode-state variant of `init_decode_state`.
+
+    K/V (and DSA indexer-K) caches live in `num_pages` + 1 pages of
+    `page_size` tokens — the extra final page is the write sink for masked
+    rows. `page_table` (batch, max_len // page_size) maps each slot's
+    logical pages to physical ids (-1 = unmapped). `max_len` must be a
+    multiple of `page_size` so the gathered logical view has exactly the
+    dense layout's shape (bit-exactness depends on identical reduction
+    extents, not just identical values).
+    """
+    dtype = dtype or jnp.dtype(cfg.dtype)
+    if max_len % page_size != 0:
+        raise ValueError(f"max_len ({max_len}) must be a multiple of "
+                         f"page_size ({page_size})")
+    l, hd = cfg.n_layers, cfg.hd
+    mp = max_len // page_size
+    state = {
+        "k_pages": jnp.zeros((l, num_pages + 1, page_size, cfg.n_kv_heads, hd),
+                             dtype),
+        "v_pages": jnp.zeros((l, num_pages + 1, page_size, cfg.n_kv_heads, hd),
+                             dtype),
+        "page_table": jnp.full((batch, mp), -1, jnp.int32),
+        "length": jnp.zeros((batch,), jnp.int32),
+    }
+    if cfg.dsa.enabled:
+        from repro.core.temporal import seed_slot_idx
+        state["idx_k_pages"] = jnp.zeros(
+            (l, num_pages + 1, page_size, cfg.dsa.indexer_dim), dtype)
+        kk = min(cfg.dsa.k, max_len)
+        base = seed_slot_idx(kk, max_len)
+        state["prev_topk"] = jnp.broadcast_to(base[None, None], (l, batch, kk))
+        state["topk_valid"] = jnp.zeros((l, batch), bool)
+        state["sel_gvr"] = jnp.zeros((l, batch), bool)
+    return state
+
+
+def paged_state_batch_axes(cfg: ModelConfig) -> Dict[str, int]:
+    """Slot-axis map of the paged decode state. Page-pool leaves (k_pages /
+    v_pages / idx_k_pages) are intentionally absent: they are pool-global,
+    and masked rows already write to the sink page inside the step — the
+    engine must pass them through unmerged."""
+    axes = {"page_table": 0, "length": 0}
+    if cfg.dsa.enabled:
+        axes.update(prev_topk=1, topk_valid=1, sel_gvr=1)
+    return axes
+
+
+def serve_step_paged(params, state, tokens, cfg: ModelConfig, *,
+                     min_write_pos: Optional[jnp.ndarray] = None,
+                     mesh=None, rules: Optional[MeshRules] = None):
+    """One paged decode step. tokens: (B,) int32. Returns (logits, state).
+
+    Mirrors `serve_step` exactly, with the logical→physical translation at
+    the cache boundary: the new token's rows scatter into
+    `page_table[b, length // page_size]` at offset `length % page_size`,
+    and attention/DSA run over the page-gathered logical view (identical
+    values AND identical shapes to the dense cache, so logits match bit for
+    bit). `min_write_pos` (B,) suppresses the cache write for rows whose
+    position is below it (redirected to the sink page): the engine uses it
+    to mask inactive slots and to replay the last prompt token over a
+    shared prefix without copy-on-writing the shared page.
+    """
+    b = tokens.shape[0]
+    hd = cfg.hd
+    x = params["embed"][tokens]                          # (B, D)
+    x = constrain(x, rules, "batch", "d_model")
+    positions = state["length"]                          # 0-based write pos
+    new_len = state["length"] + 1
+    table = state["page_table"]
+    page_size = state["k_pages"].shape[2]
+    sink = state["k_pages"].shape[1] - 1                 # last physical page
+    mp = table.shape[1]
+    n = mp * page_size                                   # logical extent
+
+    lp = positions // page_size
+    off = positions % page_size
+    phys = jnp.take_along_axis(table, lp[:, None], axis=1)[:, 0]
+    writable = phys >= 0
+    if min_write_pos is not None:
+        writable &= positions >= min_write_pos
+    dest = jnp.where(writable, phys, sink)
+    # unmapped logical pages gather page 0 — garbage rows, dead beyond
+    # `length` under the NEG_SENTINEL masking convention (finite values, so
+    # their post-mask contribution is exactly zero, as in the dense layout)
+    gather = jnp.clip(table, 0, sink)
+
+    use_dsa = cfg.dsa.enabled and n > cfg.dsa.min_n
+
+    def layer(x, carry):
+        p = carry["p"]
+        kp, vp = carry["k_pages"], carry["v_pages"]
+        idx_kp = carry.get("idx_k_pages")
+        prev_topk = carry.get("prev_topk")
+        topk_valid = carry.get("topk_valid")
+        h = rms_norm(x, p["ln1"])
+        q, kn, vn = _project_qkv(p, h, b, positions, cfg, rules)
+        kp = kp.at[dest, off].set(kn.astype(kp.dtype))
+        vp = vp.at[dest, off].set(vn.astype(vp.dtype))
+        kc = kp[gather].reshape(b, n, cfg.n_kv_heads, hd)
+        vc = vp[gather].reshape(b, n, cfg.n_kv_heads, hd)
+        kc = constrain(kc, rules, "batch", None, None, None)
+        vc = constrain(vc, rules, "batch", None, None, None)
+
+        out = {"k_pages": kp, "v_pages": vp, "p": p}
+        idx_kc = None
+        if use_dsa:
+            ik = dsa_mod.indexer_k(p["indexer"], h, positions,
+                                   dim=cfg.dsa.indexer_dim,
+                                   rope_base=cfg.rope_base)
+            idx_kp = idx_kp.at[dest, off].set(ik.astype(idx_kp.dtype))
+            idx_kc = idx_kp[gather].reshape(b, n, cfg.dsa.indexer_dim)
+        if idx_kp is not None:
+            out["idx_k_pages"] = idx_kp
+        attn, extras = _attend_decode(p, h, q, kc, vc, idx_kc, prev_topk,
+                                      topk_valid, new_len, cfg, use_dsa,
+                                      rules, mesh)
+        out.update(extras)
+        attn = attn.reshape(b, cfg.n_heads * hd).astype(x.dtype)
+        x = x + attn @ p["wo"]
+        h = rms_norm(x, p["ln2"])
+        if cfg.moe.num_experts:
+            m = _mlp(p, h[:, None, :], cfg, mesh)[:, 0]
+        else:
+            m = _mlp(p, h, cfg, mesh)
+        x = x + m
+        x = constrain(x, rules, "batch", "d_model")
+        return x, out
+
+    carry_in = {"p": params["layers"], "k_pages": state["k_pages"],
+                "v_pages": state["v_pages"]}
+    if cfg.dsa.enabled:
+        carry_in["idx_k_pages"] = state["idx_k_pages"]
+        carry_in["prev_topk"] = state["prev_topk"]
+        if "topk_valid" in state:
+            carry_in["topk_valid"] = state["topk_valid"]
+    x, outs = jax.lax.scan(layer, x, carry_in)
+
+    new_state = dict(state)
+    new_state["k_pages"], new_state["v_pages"] = outs["k_pages"], outs["v_pages"]
+    if cfg.dsa.enabled:
+        new_state["idx_k_pages"] = outs["idx_k_pages"]
         new_state["prev_topk"] = outs["prev_topk"]
         if "topk_valid" in state:
             new_state["topk_valid"] = outs["topk_valid"]

@@ -38,11 +38,27 @@ of requests occupies the pool. Continuous batching makes the buffer's
 
 `DecodeEngine.method_log` records which selector path (`gvr` / `radix` /
 `exact` / `dense`) served each slot on each tick, straight from the
-selector's own per-row report (`SelectorOutput.gvr_rows`).
+selector's own per-row report (`SelectorOutput.gvr_rows`);
+`EngineReport` splits the counts into prefill-tick and decode-tick
+buckets, and `gvr_hit_rate` is defined over decode ticks only.
+
+## Paged KV layout
+
+`DecodeEngine(kv_layout="paged", page_size=..., num_pages=...)` swaps the
+dense per-slot caches for the pool-of-pages layout in `serve.paged`:
+block tables translate logical token positions to physical pages, shared
+prompt prefixes are admitted by ref-count through a hash-chain prefix
+cache, admission fails over to queueing under page pressure, and DECODE
+slots preempt the lowest-priority PREFILL slot rather than deadlock.
+Decode stays bit-identical to the dense layout (the Top-K/feedback state
+is logical-space; see `serve.paged`'s module docstring).
 """
 
 from .engine import DecodeEngine, EngineReport, Request
 from .feedback_pool import FeedbackPool
+from .paged import (AdmitPlan, BlockPool, BlockTable, PagedKVManager,
+                    PoolExhausted, PrefixCache)
+from .sampling import sample_token
 from .scheduler import (DECODE, DONE, PREFILL, QUEUED, FIFOScheduler,
                         LongestContextFirstScheduler, Scheduler,
                         make_scheduler)
@@ -50,6 +66,8 @@ from .scheduler import (DECODE, DONE, PREFILL, QUEUED, FIFOScheduler,
 __all__ = [
     "DecodeEngine", "EngineReport", "Request",
     "FeedbackPool",
+    "AdmitPlan", "BlockPool", "BlockTable", "PagedKVManager",
+    "PoolExhausted", "PrefixCache", "sample_token",
     "Scheduler", "FIFOScheduler", "LongestContextFirstScheduler",
     "make_scheduler", "QUEUED", "PREFILL", "DECODE", "DONE",
 ]

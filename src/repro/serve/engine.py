@@ -9,8 +9,9 @@ decode state). Per tick it:
      pool via a batch-1 jitted chunk (other slots are untouched — they keep
      decoding the same tick);
   3. runs ONE jitted `serve_step` over the whole pool for the DECODE slots,
-     greedy-samples their next tokens, and merges the new state back only
-     for active rows — finished/idle/prefilling slots keep their state
+     samples their next tokens (greedy by default; per-request temperature/
+     top-p with a seeded PRNG key otherwise), and merges the new state back
+     only for active rows — finished/idle/prefilling slots keep their state
      bit-for-bit, and the step never recompiles (static shapes, masking
      instead of shape changes, per the NEG_SENTINEL convention);
   4. retires finished slots (eos or max_new_tokens), recycling their
@@ -19,6 +20,23 @@ decode state). Per tick it:
 Every served slot-tick is logged with the selector path that actually
 produced its Top-K (`gvr`/`radix`/`exact`, or `dense` before the DSA gate
 opens) — taken from the selector's own per-row report, not inferred.
+`EngineReport` splits the counts by phase: prefill chunks are admission-
+adjacent (their first tick can never be warm), so `gvr_hit_rate` is
+defined over decode ticks only.
+
+KV layouts (`kv_layout`):
+
+* "dense" — per-slot `(num_slots, max_len)` caches (PR 1 behavior).
+* "paged" — pool-of-pages caches behind `serve.paged.PagedKVManager`:
+  per-slot block tables translate logical positions to physical pages,
+  shared prompt prefixes are admitted by ref-count through the prefix
+  cache (the engine then skips streaming the shared tokens, replaying at
+  least the last prompt token), admission fails over to queueing when
+  pages are exhausted, and a DECODE slot that needs a page under a full
+  pool preempts the lowest-priority PREFILL slot (pages released, feedback
+  poisoned, request re-queued at the front) instead of deadlocking. Decode
+  is bit-identical to the dense layout for the same trace — Top-K and the
+  GVR feedback buffer live in logical token space (see serve.paged).
 
 Bit-exactness: every per-slot computation in `serve_step` is row-parallel
 (attention, norms, projections act per batch row), so a request decoded in
@@ -37,16 +55,24 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.models.transformer import PAGED_NEVER_WRITE
+
+from . import sampling
 from .feedback_pool import FeedbackPool
+from .paged import PagedKVManager, PoolExhausted
 from .scheduler import DECODE, DONE, PREFILL, QUEUED, Scheduler, make_scheduler
 
 
-@dataclasses.dataclass
-class Request:
+@dataclasses.dataclass(eq=False)       # identity equality: the scheduler
+class Request:                         # queue must never compare ndarray fields
     uid: int
     prompt: np.ndarray                 # (P,) int32 prompt tokens
     max_new_tokens: int = 16
     arrival: int = 0                   # tick at which the request may admit
+    # sampling policy: temperature == 0 → greedy (the bit-exact default)
+    temperature: float = 0.0
+    top_p: float = 1.0
+    seed: Optional[int] = None         # PRNG seed (default: uid)
     # lifecycle bookkeeping (engine-owned)
     phase: str = QUEUED
     slot: Optional[int] = None
@@ -55,11 +81,19 @@ class Request:
     admitted_at: Optional[int] = None
     finished_at: Optional[int] = None
     logits_log: List[np.ndarray] = dataclasses.field(default_factory=list)
+    preemptions: int = 0
+    # paged-layout internals
+    _materialized: int = 0             # prompt positions backed by shared pages
+    _skip: int = 0                     # prefill_pos at admission (cache skip)
+    _key: Optional[jnp.ndarray] = None
 
     def __post_init__(self):
         self.prompt = np.asarray(self.prompt, np.int32).reshape(-1)
         if len(self.prompt) == 0:
             raise ValueError(f"request {self.uid}: empty prompt")
+        if not (0.0 < self.top_p <= 1.0):
+            raise ValueError(f"request {self.uid}: top_p must be in (0, 1], "
+                             f"got {self.top_p}")
 
 
 @dataclasses.dataclass
@@ -69,7 +103,12 @@ class EngineReport:
     decoded_tokens: int
     prefill_tokens: int
     completed: int
-    method_counts: Dict[str, int]
+    method_counts: Dict[str, int]                  # combined (both phases)
+    prefill_method_counts: Dict[str, int] = dataclasses.field(default_factory=dict)
+    decode_method_counts: Dict[str, int] = dataclasses.field(default_factory=dict)
+    preemptions: int = 0
+    prefix_hit_tokens: int = 0                     # prompt tokens not streamed
+    peak_page_utilization: float = 0.0             # paged layout only
 
     @property
     def tokens_per_s(self) -> float:
@@ -77,8 +116,19 @@ class EngineReport:
 
     @property
     def gvr_hit_rate(self) -> float:
-        total = sum(self.method_counts.values())
-        return self.method_counts.get("gvr", 0) / total if total else 0.0
+        """GVR coverage of DECODE ticks. Prefill chunks are excluded: the
+        first chunk after an admission can never be warm, so folding
+        prefill in dilutes the steady-state serving metric the paper's
+        claim is about (prefill coverage is reported separately)."""
+        total = sum(self.decode_method_counts.values())
+        return (self.decode_method_counts.get("gvr", 0) / total
+                if total else 0.0)
+
+    @property
+    def prefill_gvr_hit_rate(self) -> float:
+        total = sum(self.prefill_method_counts.values())
+        return (self.prefill_method_counts.get("gvr", 0) / total
+                if total else 0.0)
 
 
 class DecodeEngine:
@@ -86,11 +136,11 @@ class DecodeEngine:
 
     def __init__(self, model, params, *, num_slots: int, max_len: int,
                  prefill_chunk: int = 8, scheduler="fifo",
-                 eos_id: Optional[int] = None, record_logits: bool = False):
-        axes = model.state_batch_axes()
-        if axes is None:
-            raise ValueError(f"model family {model.cfg.family!r} does not "
-                             f"expose slot-wise decode state")
+                 eos_id: Optional[int] = None, record_logits: bool = False,
+                 kv_layout: str = "dense", page_size: int = 16,
+                 num_pages: Optional[int] = None, prefix_caching: bool = True):
+        if kv_layout not in ("dense", "paged"):
+            raise ValueError(f"unknown kv_layout {kv_layout!r}")
         self.model = model
         self.params = params
         self.cfg = model.cfg
@@ -99,16 +149,48 @@ class DecodeEngine:
         self.prefill_chunk = int(prefill_chunk)
         self.eos_id = eos_id
         self.record_logits = record_logits
-        self._axes = axes
+        self.kv_layout = kv_layout
         self.scheduler: Scheduler = (scheduler if isinstance(scheduler, Scheduler)
                                      else make_scheduler(scheduler))
         self.pool = FeedbackPool(model, self.num_slots)
-        self.state = model.init_decode_state(self.num_slots, self.max_len)
+
+        if kv_layout == "paged":
+            axes = model.paged_state_batch_axes()
+            if axes is None:
+                raise ValueError(f"model family {model.cfg.family!r} does "
+                                 f"not expose a paged decode state")
+            self._axes = axes
+            pages_per_slot = -(-self.max_len // int(page_size))
+            if self.max_len % int(page_size) != 0:
+                raise ValueError(
+                    f"max_len ({self.max_len}) must be a multiple of "
+                    f"page_size ({page_size}) — the gathered logical view "
+                    f"must match the dense cache shape exactly")
+            self.num_pages = (int(num_pages) if num_pages is not None
+                              else self.num_slots * pages_per_slot)
+            self.kv: Optional[PagedKVManager] = PagedKVManager(
+                num_slots=self.num_slots, max_len=self.max_len,
+                page_size=int(page_size), num_pages=self.num_pages,
+                prefix_caching=prefix_caching)
+            self.state = model.init_paged_decode_state(
+                self.num_slots, self.max_len, num_pages=self.num_pages,
+                page_size=int(page_size))
+        else:
+            axes = model.state_batch_axes()
+            if axes is None:
+                raise ValueError(f"model family {model.cfg.family!r} does not "
+                                 f"expose slot-wise decode state")
+            self._axes = axes
+            self.kv = None
+            self.state = model.init_decode_state(self.num_slots, self.max_len)
 
         self.slots: List[Optional[Request]] = [None] * self.num_slots
         self.tick_count = 0
         self.decoded_tokens = 0
         self.prefill_tokens = 0
+        self.preemptions = 0
+        self.peak_occupancy = 0
+        self.peak_pages_in_use = 0
         self.completed: List[Request] = []
         # per-request: [(tick, phase, method), ...] — which selector path
         # served the request on each tick it was live
@@ -132,12 +214,26 @@ class DecodeEngine:
 
     # ---- jitted kernels -------------------------------------------------
 
+    def _serve_step(self, params, state, tokens, min_write_pos=None):
+        """Layout dispatch: one model step over the given (sub-)pool."""
+        if self.kv is not None:
+            return self.model.serve_step_paged(params, state, tokens,
+                                               min_write_pos=min_write_pos)
+        return self.model.serve_step(params, state, tokens)
+
     def _tick_impl(self, params, state, tokens, active):
-        """One pool-wide decode step; inactive rows keep their old state."""
-        logits, new_state = self.model.serve_step(params, state, tokens)
+        """One pool-wide decode step; inactive rows keep their old state.
+        Paged layout: inactive rows additionally redirect their cache write
+        to the sink page (pool-global page leaves can't be row-merged)."""
+        mwp = (jnp.where(active, jnp.int32(0), jnp.int32(PAGED_NEVER_WRITE))
+               if self.kv is not None else None)
+        logits, new_state = self._serve_step(params, state, tokens, mwp)
         merged = {}
         for key, arr in new_state.items():
-            ax = self._axes[key]
+            ax = self._axes.get(key)
+            if ax is None:            # pool-global leaf (paged page arrays)
+                merged[key] = arr
+                continue
             shape = [1] * arr.ndim
             shape[ax] = self.num_slots
             merged[key] = jnp.where(active.reshape(shape), arr, state[key])
@@ -145,26 +241,40 @@ class DecodeEngine:
         return merged, next_tok, logits
 
     def _slice_slot(self, state, slot):
-        return {k: jax.lax.dynamic_slice_in_dim(v, slot, 1, axis=self._axes[k])
-                for k, v in state.items()}
+        """Batch-1 view of one slot; pool-global leaves pass through whole
+        (a batch-1 paged step writes straight into the global page pool)."""
+        out = {}
+        for k, v in state.items():
+            ax = self._axes.get(k)
+            out[k] = (v if ax is None
+                      else jax.lax.dynamic_slice_in_dim(v, slot, 1, axis=ax))
+        return out
 
     def _write_slot(self, state, sub, slot):
-        return {k: jax.lax.dynamic_update_slice_in_dim(
-                    state[k], sub[k], slot, axis=self._axes[k])
-                for k in state}
+        out = {}
+        for k in state:
+            ax = self._axes.get(k)
+            out[k] = (sub[k] if ax is None
+                      else jax.lax.dynamic_update_slice_in_dim(
+                          state[k], sub[k], slot, axis=ax))
+        return out
 
-    def _prefill_impl(self, params, state, tokens, slot, count):
+    def _prefill_impl(self, params, state, tokens, slot, count,
+                      min_write_pos=None):
         """Stream `count` prompt tokens (of a fixed-size padded chunk) into
         one slot, leaving every other slot untouched. Returns the updated
         pool state, the next token implied by the last real prompt token,
-        and the per-token GVR-path mask for the method log."""
+        and the per-token GVR-path mask for the method log. Paged layout:
+        positions below `min_write_pos` skip their cache write — the
+        shared-prefix replay must not touch pages it shares."""
         sub = self._slice_slot(state, slot)
         vocab = self.cfg.vocab
         logits0 = jnp.zeros((1, vocab), jnp.float32)
+        mwp = (min_write_pos[None] if min_write_pos is not None else None)
 
         def body(carry, tok):
             st, last_logits, i = carry
-            logits, st2 = self.model.serve_step(params, st, tok[None])
+            logits, st2 = self._serve_step(params, st, tok[None], mwp)
             take = i < count
             st = jax.tree.map(lambda new, old: jnp.where(take, new, old),
                               st2, st)
@@ -187,6 +297,14 @@ class DecodeEngine:
                 f"request {request.uid}: prompt ({len(request.prompt)}) + "
                 f"max_new ({request.max_new_tokens}) exceeds max_len "
                 f"({self.max_len})")
+        if self.kv is not None:
+            ps = self.kv.page_size
+            worst = -(-(len(request.prompt) + request.max_new_tokens) // ps)
+            if worst > self.kv.pool.num_pages:
+                raise ValueError(
+                    f"request {request.uid}: needs up to {worst} pages but "
+                    f"the pool holds {self.kv.pool.num_pages} — it could "
+                    f"never admit")
         self.method_log.setdefault(request.uid, [])
         self.scheduler.submit(request)
 
@@ -196,17 +314,138 @@ class DecodeEngine:
     def _method_name(self, gvr_row: bool) -> str:
         return "gvr" if gvr_row else self._cold_method
 
+    def _next_token(self, req: Request, argmax_tok: int, logits_row) -> int:
+        """Greedy by default; temperature/top-p sampling with the request's
+        own PRNG key otherwise (key advances one split per sampled token)."""
+        if req.temperature <= 0.0:
+            return int(argmax_tok)
+        req._key, sub = jax.random.split(req._key)
+        return sampling.sample_token(logits_row, sub,
+                                     temperature=req.temperature,
+                                     top_p=req.top_p)
+
+    # ---- paged-layout page bookkeeping ----------------------------------
+
+    def _push_page_table(self) -> None:
+        if self.kv is not None and self.kv.dirty:
+            self.state["page_table"] = jnp.asarray(self.kv.table_array())
+            self.kv.dirty = False
+
+    def _copy_page(self, src: int, dst: int) -> None:
+        """Device-side page copy backing a copy-on-write remap."""
+        for key in ("k_pages", "v_pages", "idx_k_pages"):
+            if key in self.state:
+                arr = self.state[key]
+                self.state[key] = arr.at[:, dst].set(arr[:, src])
+
+    def _preempt_victim(self, exclude: Optional[int] = None) -> Optional[int]:
+        """Lowest-priority victim under page pressure. PREFILL slots first
+        (most remaining prompt tokens = least sunk cost, ties toward the
+        latest admission); if every other slot is already decoding, fall
+        back to the DECODE slot with the fewest generated tokens — losing a
+        nearly-done request to save a barely-started one would waste the
+        most work."""
+        best, best_key = None, None
+        for s, req in enumerate(self.slots):
+            if req is None or req.phase != PREFILL or s == exclude:
+                continue
+            key = (len(req.prompt) - req.prefill_pos, req.admitted_at)
+            if best_key is None or key > best_key:
+                best, best_key = s, key
+        if best is not None:
+            return best
+        for s, req in enumerate(self.slots):
+            if req is None or req.phase != DECODE or s == exclude:
+                continue
+            key = (-len(req.generated), req.admitted_at)
+            if best_key is None or key > best_key:
+                best, best_key = s, key
+        return best
+
+    def _preempt(self, victim: int) -> None:
+        """Evict a slot back to the queue: pages released, feedback row
+        poisoned, request re-queued at the front. Its streamed prefix (and,
+        for a DECODE victim, its generated tokens) is discarded — the replay
+        regenerates it deterministically (greedy is a pure function of the
+        prompt; sampling re-derives the same per-request key). The token
+        counters are rolled back with it, so the report's decoded/prefill
+        totals stay delivered-work only; method_log keeps the discarded
+        pass's entries — those selector invocations really ran (cost
+        telemetry, per-tick)."""
+        req = self.slots[victim]
+        self.kv.release_slot(victim)
+        self.state = self.pool.evict(self.state, victim)
+        self.decoded_tokens -= len(req.generated)
+        self.prefill_tokens -= max(req.prefill_pos - req._skip, 0)
+        req.phase, req.slot = QUEUED, None
+        req.prefill_pos = 0
+        req._materialized = 0
+        req._skip = 0
+        req.generated.clear()
+        req.logits_log.clear()
+        req.preemptions += 1
+        self.slots[victim] = None
+        self.preemptions += 1
+        self.scheduler.requeue(req)
+
+    def _ensure_decode_page(self, slot: int, pos: int) -> None:
+        """Map (and COW-protect) the page a DECODE slot is about to write.
+        Pool pressure resolves in order: reclaim cold prefix-cache pages →
+        preempt the lowest-priority slot (PREFILL first) → give up (the
+        requester alone exceeds the pool — a sizing error, caught at
+        submit)."""
+        while True:
+            try:
+                self.kv.ensure_mapped(slot, pos)
+                cow = self.kv.ensure_writable(slot, pos)
+                if cow is not None:
+                    self._copy_page(*cow)
+                return
+            except PoolExhausted:
+                victim = self._preempt_victim(exclude=slot)
+                if victim is None:
+                    raise RuntimeError(
+                        f"page pool exhausted ({self.kv.pool.num_pages} pages"
+                        f") with nothing left to preempt: slot {slot} alone "
+                        f"needs more pages than the pool holds — increase "
+                        f"num_pages") from None
+                self._preempt(victim)
+
     def _admit(self) -> None:
         for slot in range(self.num_slots):
             if self.slots[slot] is not None:
                 continue
-            req = self.scheduler.pick(self.tick_count)
+            req = self.scheduler.peek(self.tick_count)
             if req is None:
                 return
-            self.state = self.pool.admit(self.state, slot,
-                                         seq_len_hint=len(req.prompt))
+            if self.kv is not None:
+                plan = self.kv.admit(slot, req.prompt)
+                if plan is None:
+                    # pool exhausted: fail over to queueing (the request —
+                    # and FIFO order — stay intact; retried next tick)
+                    return
+                self.scheduler.take(req)
+                self.state = self.pool.admit(self.state, slot,
+                                             seq_len_hint=len(req.prompt))
+                req._materialized = plan.materialized
+                req._skip = plan.skip_len
+                req.prefill_pos = plan.skip_len
+                if plan.skip_len:
+                    self.state["length"] = \
+                        self.state["length"].at[slot].set(plan.skip_len)
+            else:
+                self.scheduler.take(req)
+                self.state = self.pool.admit(self.state, slot,
+                                             seq_len_hint=len(req.prompt))
+                req.prefill_pos = 0
+                req._materialized = 0
+                req._skip = 0
+            if req.temperature > 0.0:
+                # re-derived per admission: a preempted request replays the
+                # same draws on its second pass (deterministic traces)
+                req._key = sampling.request_key(
+                    req.seed if req.seed is not None else req.uid)
             req.slot, req.phase = slot, PREFILL
-            req.prefill_pos = 0
             req.admitted_at = self.tick_count
             self.slots[slot] = req
 
@@ -218,24 +457,44 @@ class DecodeEngine:
             count = len(chunk)
             padded = np.zeros((self.prefill_chunk,), np.int32)
             padded[:count] = chunk
-            self.state, next_tok, gvr_steps, last_logits = self._prefill_fn(
-                self.params, self.state, jnp.asarray(padded),
-                req.slot, count)
+            if self.kv is not None:
+                # prompt pages were all mapped at admission; only the write
+                # mask (shared-prefix replay protection) varies per request
+                self._push_page_table()
+                self.state, next_tok, gvr_steps, last_logits = self._prefill_fn(
+                    self.params, self.state, jnp.asarray(padded),
+                    req.slot, count, jnp.int32(req._materialized))
+            else:
+                self.state, next_tok, gvr_steps, last_logits = self._prefill_fn(
+                    self.params, self.state, jnp.asarray(padded),
+                    req.slot, count)
             # the tick's dispatch decision is made at tick entry — log the
             # path that served the chunk's first token
             self._log(req, self._method_name(bool(np.asarray(gvr_steps)[0])))
             req.prefill_pos += count
             self.prefill_tokens += count
             if req.prefill_pos >= len(req.prompt):
+                if self.kv is not None:
+                    self.kv.commit_prefix(req.slot, req.prompt)
                 # the last prompt token's logits yield the first generation
                 req.phase = DECODE
-                req.generated.append(int(next_tok))
+                req.generated.append(self._next_token(req, int(next_tok),
+                                                      last_logits[0]))
                 if self.record_logits:
                     req.logits_log.append(np.asarray(last_logits[0]))
                 self.decoded_tokens += 1
                 self._maybe_finish(req.slot)
 
     def _decode_tick(self) -> None:
+        if self.kv is not None:
+            # map (and COW-protect) each DECODE slot's write page up front;
+            # pool pressure may preempt PREFILL slots here
+            for s, req in enumerate(self.slots):
+                if req is None or req.phase != DECODE:
+                    continue
+                pos = len(req.prompt) + len(req.generated) - 1
+                self._ensure_decode_page(s, pos)
+            self._push_page_table()
         active = np.array([r is not None and r.phase == DECODE
                            for r in self.slots])
         if not active.any():
@@ -254,7 +513,8 @@ class DecodeEngine:
             if not active[s]:
                 continue
             self._log(req, self._method_name(bool(sel_gvr[s])))
-            req.generated.append(int(next_tok[s]))
+            req.generated.append(self._next_token(req, int(next_tok[s]),
+                                                  _logits[s]))
             if self.record_logits:
                 req.logits_log.append(np.asarray(_logits[s]))
             self.decoded_tokens += 1
@@ -267,6 +527,8 @@ class DecodeEngine:
                     and req.generated[-1] == self.eos_id)):
             req.phase = DONE
             req.finished_at = self.tick_count
+            if self.kv is not None:
+                self.kv.release_slot(slot)
             self.state = self.pool.evict(self.state, slot)
             self.slots[slot] = None
             self.completed.append(req)
@@ -274,8 +536,16 @@ class DecodeEngine:
     def tick(self) -> None:
         """One engine tick: admit → chunked prefill → pool decode → retire."""
         self._admit()
+        # occupancy of the serving work this tick: measured post-admission,
+        # pre-retirement (a slot admitted and one retiring this same tick
+        # are both genuinely served by it)
+        self.peak_occupancy = max(self.peak_occupancy,
+                                  sum(r is not None for r in self.slots))
         self._prefill_tick()
         self._decode_tick()
+        if self.kv is not None:
+            self.peak_pages_in_use = max(self.peak_pages_in_use,
+                                         self.kv.pool.pages_in_use)
         self.tick_count += 1
 
     def idle(self) -> bool:
@@ -292,17 +562,31 @@ class DecodeEngine:
         start_decoded = self.decoded_tokens
         start_prefill = self.prefill_tokens
         start_completed = len(self.completed)
+        start_preempt = self.preemptions
+        start_skipped = self.kv.skipped_tokens if self.kv is not None else 0
         while not self.idle() and self.tick_count - start_tick < max_ticks:
             self.tick()
         wall = time.perf_counter() - t0
         # report THIS run's window only — the engine may be reused
-        counts: Dict[str, int] = {}
+        combined: Dict[str, int] = {}
+        by_phase: Dict[str, Dict[str, int]] = {PREFILL: {}, DECODE: {}}
         for entries in self.method_log.values():
-            for tick, _phase, method in entries:
+            for tick, phase, method in entries:
                 if tick >= start_tick:
-                    counts[method] = counts.get(method, 0) + 1
-        return EngineReport(ticks=self.tick_count - start_tick, wall_s=wall,
-                            decoded_tokens=self.decoded_tokens - start_decoded,
-                            prefill_tokens=self.prefill_tokens - start_prefill,
-                            completed=len(self.completed) - start_completed,
-                            method_counts=counts)
+                    combined[method] = combined.get(method, 0) + 1
+                    bucket = by_phase.setdefault(phase, {})
+                    bucket[method] = bucket.get(method, 0) + 1
+        return EngineReport(
+            ticks=self.tick_count - start_tick, wall_s=wall,
+            decoded_tokens=self.decoded_tokens - start_decoded,
+            prefill_tokens=self.prefill_tokens - start_prefill,
+            completed=len(self.completed) - start_completed,
+            method_counts=combined,
+            prefill_method_counts=by_phase[PREFILL],
+            decode_method_counts=by_phase[DECODE],
+            preemptions=self.preemptions - start_preempt,
+            prefix_hit_tokens=(self.kv.skipped_tokens - start_skipped
+                               if self.kv is not None else 0),
+            peak_page_utilization=(self.peak_pages_in_use
+                                   / self.kv.pool.num_pages
+                                   if self.kv is not None else 0.0))

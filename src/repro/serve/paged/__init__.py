@@ -1,0 +1,62 @@
+"""Paged KV-cache subsystem with shared-prefix reuse (serving layer).
+
+## Why paging
+
+The dense engine reserves a `(num_slots, max_len)` KV footprint per slot,
+so pool memory scales with the worst case even when most slots hold short
+requests. Paging replaces that with a global pool of `num_pages` pages of
+`page_size` tokens and a per-slot block table (`BlockTable`) mapping
+logical token positions to physical pages: memory tracks the *live* token
+count, slots oversubscribe the pool, and identical prompt prefixes are
+stored once and shared by ref-count (`PrefixCache`). `DecodeEngine`
+switches layouts with `kv_layout="paged"`.
+
+## The logical-space invariant (GVR feedback)
+
+GVR's warm start feeds each step's Top-K indices back as the next step's
+prediction. Those indices — `prev_topk`, `topk_valid`, everything the
+selector sees — are **logical token positions**, never physical page ids:
+`serve_step_paged` gathers the slot's pages into a contiguous logical view
+*before* scoring/selection, and the whole sparse stack
+(`sparse.selector`, `sparse.dsa`) runs on that view exactly as it runs on
+the dense cache. The temporal prediction is therefore layout-invariant: a
+page-table remap (COW, preempt/re-admit, defragmentation) can never
+invalidate or shift the feedback, and paged decode is bit-identical to
+dense decode (pinned by tests/test_paged.py).
+
+## Page-size tradeoffs
+
+Smaller pages (4–8 tokens) track ragged lengths tightly (≤ page_size - 1
+wasted slots per request) and share shorter common prefixes (sharing is
+full-page-granular), but mean more table entries, more allocator calls and
+more scattered DMA. Larger pages (32–128) amortize gather/DMA overhead —
+the Pallas `paged_gather` kernel moves one contiguous `(page_size, D)`
+tile per table entry — at the cost of internal fragmentation and coarser
+sharing. `max_len` must divide evenly into pages: the gathered logical
+view then has exactly the dense layout's shape, which is what makes the
+bit-exactness guarantee hold (identical reduction extents, not just
+identical values). Default `page_size=16` balances the two at smoke scale.
+
+## Shared-prefix hash chains
+
+Full prompt pages are keyed by a rolling hash chain
+`h_i = H(h_{i-1} || tokens_i)` (`prefix_cache.chain_hashes`), so a key
+commits to the page's tokens and its entire prefix; entries store the raw
+token bytes and matching verifies them, so a collision can only cost
+sharing, never correctness. Admission acquires the longest cached chain by
+ref-count (no copy), streams the remainder of the prompt, and replays at
+least the final prompt token (its logits seed generation); the replay's
+cache writes are redirected to the sink page so shared pages stay
+copy-free. Divergent writes are guarded by copy-on-write
+(`PagedKVManager.ensure_writable`).
+"""
+
+from .block_pool import BlockPool, PoolExhausted
+from .block_table import BlockTable
+from .manager import AdmitPlan, PagedKVManager
+from .prefix_cache import PrefixCache, chain_hashes
+
+__all__ = [
+    "AdmitPlan", "BlockPool", "BlockTable", "PagedKVManager",
+    "PoolExhausted", "PrefixCache", "chain_hashes",
+]

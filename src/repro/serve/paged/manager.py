@@ -1,0 +1,187 @@
+"""PagedKVManager: the engine-facing facade over pool + tables + prefix cache.
+
+Owns every host-side paging decision for a `DecodeEngine` running the paged
+KV layout: admission planning (shared-prefix acquisition, bulk allocation
+with fail-over to queueing), lazy page mapping as slots write past page
+boundaries, copy-on-write protection for shared pages, prefix-cache commit
+at prefill completion, and release on eviction/preemption. The device side
+sees none of this — only the stacked `page_table` array, pushed by the
+engine when `dirty`.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Tuple
+
+import numpy as np
+
+from .block_pool import BlockPool, PoolExhausted
+from .block_table import BlockTable
+from .prefix_cache import PrefixCache, chain_hashes
+
+
+@dataclasses.dataclass
+class AdmitPlan:
+    """Host-side result of a successful paged admission."""
+    skip_len: int        # prompt tokens the engine may skip streaming
+    materialized: int    # prompt positions already backed by shared pages
+    shared_pages: int    # pages acquired from the prefix cache
+
+
+class PagedKVManager:
+    """Page bookkeeping for one engine's slot pool (see module docstring)."""
+
+    def __init__(self, *, num_slots: int, max_len: int, page_size: int,
+                 num_pages: int, prefix_caching: bool = True):
+        if max_len % page_size != 0:
+            raise ValueError(f"max_len ({max_len}) must be a multiple of "
+                             f"page_size ({page_size})")
+        self.num_slots = int(num_slots)
+        self.max_len = int(max_len)
+        self.page_size = int(page_size)
+        self.pages_per_slot = self.max_len // self.page_size
+        self.pool = BlockPool(num_pages, page_size)
+        self.tables = [BlockTable(self.pages_per_slot)
+                       for _ in range(self.num_slots)]
+        self.prefix: Optional[PrefixCache] = (PrefixCache() if prefix_caching
+                                              else None)
+        self.dirty = True                 # device table needs a push
+        self.skipped_tokens = 0           # prompt tokens served from cache
+        self.cow_copies = 0
+
+    # ---- allocation with prefix-cache pressure relief -------------------
+
+    def _alloc(self) -> int:
+        try:
+            return self.pool.alloc()
+        except PoolExhausted:
+            if self.prefix is not None and self.prefix.reclaim(self.pool, 1):
+                return self.pool.alloc()
+            raise
+
+    def _free_capacity(self) -> int:
+        """Pages obtainable without preemption: free + cache-reclaimable."""
+        cap = self.pool.num_free
+        if self.prefix is not None:
+            cap += self.prefix.reclaimable(self.pool)
+        return cap
+
+    # ---- admission ------------------------------------------------------
+
+    def admit(self, slot: int, prompt) -> Optional[AdmitPlan]:
+        """Plan a request's pages: acquire the longest shared prefix chain,
+        allocate the rest of the prompt's pages, map them. Returns None —
+        with NOTHING acquired — when the pool (even after reclaiming cold
+        cached pages) cannot hold the non-shared pages: the engine leaves
+        the request queued instead of raising (fail-over to queueing)."""
+        plen = len(prompt)
+        table = self.tables[slot]
+        assert not table.mapped(), f"slot {slot} admitted while mapped"
+        chain = (chain_hashes(prompt, self.page_size)
+                 if self.prefix is not None else [])
+        n_prompt_pages = -(-plen // self.page_size)
+        # side-effect-free capacity check first: a request that retries
+        # every tick under page pressure must not touch LRU order or stats
+        hits = self.prefix.probe(chain) if self.prefix is not None else 0
+        if self._free_capacity() < n_prompt_pages - hits:
+            return None
+        shared = (self.prefix.match(self.pool, chain)
+                  if self.prefix is not None else [])
+        need = n_prompt_pages - len(shared)
+        if self._free_capacity() < need:            # unreachable in the
+            for page in shared:                     # single-threaded engine,
+                self.pool.decref(page)              # kept as a guard
+            return None
+        for i, page in enumerate(shared):
+            table.map(i, page)
+        for i in range(len(shared), n_prompt_pages):
+            table.map(i, self._alloc())
+        self.dirty = True
+        materialized = len(shared) * self.page_size
+        # the last prompt token always streams: its step produces the
+        # logits that seed generation (and re-arms the feedback buffer)
+        skip = min(materialized, plen - 1)
+        self.skipped_tokens += skip
+        return AdmitPlan(skip_len=skip, materialized=materialized,
+                         shared_pages=len(shared))
+
+    # ---- steady-state paging --------------------------------------------
+
+    def ensure_mapped(self, slot: int, pos: int) -> None:
+        """Map the logical page holding `pos`, allocating on first touch.
+        Raises PoolExhausted when no page is obtainable — the engine then
+        preempts a PREFILL slot and retries."""
+        lp = pos // self.page_size
+        if self.tables[slot].get(lp) >= 0:
+            return
+        self.tables[slot].map(lp, self._alloc())
+        self.dirty = True
+
+    def ensure_writable(self, slot: int, pos: int) -> Optional[Tuple[int, int]]:
+        """Copy-on-write guard: if `pos` falls in a page shared with other
+        owners (ref-count > 1), remap the slot to a fresh page and return
+        (src, dst) so the engine copies the page's device rows. Returns
+        None when the page is exclusively owned (the engine's normal path:
+        shared pages are only ever *read*, because the prefill replay over
+        a shared prefix redirects its writes to the sink page)."""
+        lp = pos // self.page_size
+        phys = self.tables[slot].get(lp)
+        if phys < 0 or self.pool.refcount[phys] == 1:
+            return None
+        dst = self._alloc()
+        self.tables[slot].map(lp, dst)
+        self.pool.decref(phys)
+        self.dirty = True
+        self.cow_copies += 1
+        return phys, dst
+
+    def commit_prefix(self, slot: int, prompt) -> None:
+        """Retain the slot's FULL prompt pages in the prefix cache (called
+        once, at prefill completion, when their contents are final)."""
+        if self.prefix is None:
+            return
+        table = self.tables[slot]
+        for i, (key, tb) in enumerate(chain_hashes(prompt, self.page_size)):
+            phys = table.get(i)
+            assert phys >= 0, (slot, i)
+            self.prefix.insert(self.pool, key, tb, phys)
+
+    def release_slot(self, slot: int) -> int:
+        """Eviction/preemption: drop the slot's refs on all its pages.
+        Prefix-cached pages survive on the cache's own ref."""
+        released = self.tables[slot].clear()
+        for page in released:
+            self.pool.decref(page)
+        if released:
+            self.dirty = True
+        return len(released)
+
+    def reclaim(self, n: int) -> int:
+        """Free up to `n` cold prefix-cache pages (engine pressure hook)."""
+        if self.prefix is None:
+            return 0
+        return self.prefix.reclaim(self.pool, n)
+
+    # ---- device-table sync + telemetry ----------------------------------
+
+    def table_array(self) -> np.ndarray:
+        """(num_slots, pages_per_slot) int32 for the jitted step."""
+        return np.stack([t.row for t in self.tables])
+
+    def stats(self) -> dict:
+        s = {
+            "pages_in_use": self.pool.pages_in_use,
+            "num_pages": self.pool.num_pages,
+            "utilization": self.pool.utilization,
+            "skipped_tokens": self.skipped_tokens,
+            "cow_copies": self.cow_copies,
+        }
+        if self.prefix is not None:
+            s.update(prefix_entries=len(self.prefix),
+                     prefix_queries=self.prefix.queries,
+                     prefix_hit_pages=self.prefix.hit_pages)
+        return s
+
+    def slot_pages(self, slot: int) -> List[int]:
+        return self.tables[slot].mapped()

@@ -1,0 +1,46 @@
+"""Non-greedy sampling for the decode engine: temperature + top-p (nucleus).
+
+Greedy (temperature == 0) remains the engine default and bypasses this
+module entirely — the bit-exactness guarantees of the serving layer (engine
+vs solo decode, paged vs dense) are stated over greedy requests and stay
+untouched. A sampling request carries its own PRNG key, seeded per request
+(`seed`, falling back to the request uid) and re-derived on every
+(re-)admission, so a trace replays deterministically even across
+preemption: the n-th sampled token of a request is a pure function of
+(seed, logits history).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def request_key(seed: int):
+    """Per-request PRNG key (re-derived at every admission)."""
+    return jax.random.PRNGKey(seed)
+
+
+def sample_token(logits, key, *, temperature: float, top_p: float = 1.0) -> int:
+    """Draw one token id from `logits` (V,) with temperature + nucleus.
+
+    top_p keeps the minimal probability-sorted prefix whose cumulative mass
+    reaches `top_p` (always at least one token); the categorical draw then
+    happens over the renormalized nucleus. temperature <= 0 degenerates to
+    greedy argmax (callers normally never get here — the engine short-
+    circuits greedy requests before any PRNG state is consumed).
+    """
+    logits = jnp.asarray(logits, jnp.float32)
+    if temperature <= 0.0:
+        return int(jnp.argmax(logits))
+    logits = logits / temperature
+    if top_p < 1.0:
+        probs = jax.nn.softmax(logits)
+        order = jnp.argsort(-probs)
+        # exclusive cumulative mass: token i survives while the mass of all
+        # strictly-more-probable tokens is < top_p → minimal covering prefix
+        csum = jnp.cumsum(probs[order]) - probs[order]
+        keep_sorted = csum < top_p
+        keep = jnp.zeros_like(keep_sorted).at[order].set(keep_sorted)
+        logits = jnp.where(keep, logits, -jnp.inf)
+    return int(jax.random.categorical(key, logits))

@@ -46,15 +46,31 @@ class Scheduler:
             return self._queue
         return [r for r in self._queue if r.arrival <= now]
 
+    def peek(self, now: Optional[int] = None):
+        """The request `pick` would admit next, without removing it. The
+        paged engine plans pages against the peeked request and only `take`s
+        it once the pages are secured — a failed plan leaves the queue (and
+        its order) untouched."""
+        ready = self._ready(now)
+        return self._choose(ready) if ready else None
+
+    def take(self, request) -> None:
+        """Commit an admission planned via `peek`."""
+        self._queue.remove(request)
+        self.admitted += 1
+
+    def requeue(self, request) -> None:
+        """Return a preempted request to the FRONT of the queue: it already
+        won admission once, so it outranks everything still waiting (FIFO
+        fairness is preserved; priority policies re-rank as usual)."""
+        self._queue.insert(0, request)
+
     def pick(self, now: Optional[int] = None):
         """Pop the next request to admit (or None). `now` gates on arrival
         time so traces with future arrivals don't admit early."""
-        ready = self._ready(now)
-        if not ready:
-            return None
-        choice = self._choose(ready)
-        self._queue.remove(choice)
-        self.admitted += 1
+        choice = self.peek(now)
+        if choice is not None:
+            self.take(choice)
         return choice
 
     def _choose(self, ready):

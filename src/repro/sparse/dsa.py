@@ -9,6 +9,13 @@ selector.
 The XLA path here is what the distributed dry-run lowers; the Pallas
 kernels (repro.kernels) are the per-device hot-spot implementations of the
 same three stages, validated against the refs in kernels/ref.py.
+
+Caches arrive here as contiguous *logical* views — under the paged serving
+layout the gather from the page pool happens in `serve_step_paged` before
+this module runs, so `prev_topk` (the temporal feedback buffer) and
+`topk_idx` are logical token positions regardless of the physical KV
+layout. Do not thread physical page ids into this pipeline: GVR's
+temporal-correlation warm start is only meaningful in logical space.
 """
 
 from __future__ import annotations

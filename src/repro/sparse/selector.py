@@ -26,6 +26,14 @@ path actually served, which the serving engine logs per tick. A production
 kernel would partition the grid by row instead of computing both paths;
 at this layer SPMD static shapes make compute-both-and-select the honest
 equivalent (same semantics as a vmapped lax.cond).
+
+Layout invariant (paged serving): every index this module consumes
+(`prev_idx`) or produces lives in *logical* token space — position within
+the request's own context, never a physical KV-page id. The paged decode
+path (`models.transformer.serve_step_paged`) gathers its page pool into a
+contiguous logical view *before* scoring, so the selector is completely
+layout-blind and the prev-Top-K feedback survives page-table remaps
+(copy-on-write, preemption, shared-prefix admission) bit-exactly.
 """
 
 from __future__ import annotations

@@ -5,9 +5,10 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.kernels import gvr_topk, indexer_topk, sparse_decode_attn
-from repro.kernels.ref import (indexer_scores_ref, sparse_decode_attn_ref,
-                               topk_ref)
+from repro.kernels import (gvr_topk, indexer_topk, paged_gather,
+                           sparse_decode_attn)
+from repro.kernels.ref import (indexer_scores_ref, paged_gather_ref,
+                               sparse_decode_attn_ref, topk_ref)
 
 RNG = np.random.default_rng(2)
 
@@ -122,3 +123,35 @@ def test_sparse_attention_matches_dense_when_all_selected():
     dense = jnp.einsum("bkgs,bskd->bkgd", p, vc).reshape(b, h, d)
     np.testing.assert_allclose(np.asarray(out), np.asarray(dense),
                                rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("feat", [(4,), (2, 8)])
+@pytest.mark.parametrize("page_size", [4, 16])
+def test_paged_gather_kernel(page_size, feat):
+    """Block-table DMA gather vs the jnp oracle: arbitrary trailing feature
+    dims, unmapped (-1) entries must come back as zero rows."""
+    p, b, mp = 6, 3, 4
+    pages = jnp.asarray(RNG.normal(size=(p, page_size) + feat), jnp.float32)
+    table = RNG.integers(-1, p, size=(b, mp)).astype(np.int32)
+    table[0, 0] = -1                                  # force an unmapped hit
+    got = paged_gather(pages, jnp.asarray(table))
+    d = int(np.prod(feat))
+    ref = paged_gather_ref(pages.reshape(p, page_size, d), jnp.asarray(table))
+    ref = np.asarray(ref).reshape((b, mp * page_size) + feat)
+    np.testing.assert_array_equal(np.asarray(got), ref)
+    assert got.shape == (b, mp * page_size) + feat
+
+
+def test_paged_gather_matches_engine_logical_view():
+    """The kernel's logical view equals the XLA gather serve_step_paged
+    uses, on the *mapped* region (the model path leaves unmapped rows as
+    garbage-behind-mask; the kernel zeroes them)."""
+    p, page_size, d = 5, 8, 4
+    pages = jnp.asarray(RNG.normal(size=(p, page_size, d)), jnp.float32)
+    table = jnp.asarray([[2, 0, 4, -1]], jnp.int32)
+    got = paged_gather(pages, table)
+    xla = pages[jnp.clip(table, 0, p - 1)].reshape(1, -1, d)
+    mapped = jnp.repeat(table[0] >= 0, page_size)
+    np.testing.assert_array_equal(np.asarray(got[0][mapped]),
+                                  np.asarray(xla[0][mapped]))
+    assert np.all(np.asarray(got[0][~mapped]) == 0)
