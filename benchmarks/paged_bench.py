@@ -78,13 +78,11 @@ def bench_paged():
                               prefill_chunk=16, **kw)
         # warm the jit caches outside the measured window, then drop the
         # warm-up request's residue (its prefix-cache pages would shrink the
-        # measured budget; the peak counters would include warm-up state)
+        # measured budget; the peak counters re-baseline inside run())
         engine.run([Request(uid=-1, prompt=np.zeros((17,), np.int32),
                             max_new_tokens=2)], max_ticks=100)
         if engine.kv is not None and engine.kv.prefix is not None:
             engine.kv.prefix.drop_all(engine.kv.pool)
-        engine.peak_occupancy = 0
-        engine.peak_pages_in_use = 0
         rng = np.random.default_rng(0)     # same trace for both engines
         reqs = _shared_prefix_trace(rng, n_req=n_req, prefix_len=prefix_len,
                                     tail_max=tail_max, gen_tokens=gen,

@@ -18,11 +18,13 @@ SECTIONS = {}
 def _register():
     from . import engine_bench as eb
     from . import operator_bench as ob
+    from . import paged_attn_bench as pab
     from . import paged_bench as pb
     from . import system_bench as sb
     SECTIONS.update({
         "engine": eb.bench_engine,
         "paged": pb.bench_paged,
+        "paged_attn": pab.bench_paged_attn,
         "table1": ob.bench_table1_pass_counts,
         "table6": ob.bench_table6_synthetic_latency,
         "table7": ob.bench_table7_per_layer_speedup,

@@ -1,0 +1,23 @@
+#!/usr/bin/env sh
+# Tier-2 smoke: run the block-table-native paged-attention benchmark on CPU.
+#
+#   ./benchmarks/smoke_paged_attn.sh
+#
+# Exercises the fused (block-table-native) paged decode path against the
+# gather-then-attend oracle end to end: per-tick gathered-bytes scaling
+# (fused must be O(K), not O(N) — asserted inside the section), single-tick
+# step wall time at two context lengths, and engine tokens/s with the
+# built-in acceptance that both modes generate identical tokens. Leaves
+# BENCH_paged_attn.json in the repo root. Exits non-zero if the section's
+# acceptance asserts fail or the section errors.
+set -eu
+cd "$(dirname "$0")/.."
+export JAX_PLATFORMS="${JAX_PLATFORMS:-cpu}"
+PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" python -m benchmarks.run paged_attn | tee /tmp/paged_attn_bench.out
+# benchmarks/run.py swallows section exceptions into */ERROR rows — fail on them
+if grep -q "ERROR" /tmp/paged_attn_bench.out; then
+    echo "paged_attn benchmark reported an error" >&2
+    exit 1
+fi
+test -f BENCH_paged_attn.json
+echo "paged_attn smoke OK"

@@ -1,14 +1,21 @@
 """Pallas TPU kernels for the DSA decode hot spots.
 
-- gvr_topk      : fused Guess-Verify-Refine exact Top-K (VMEM-resident row)
-- indexer_topk  : fused indexer scoring + GVR (scores never touch HBM)
-- sparse_attn   : Top-K gathered decode attention (scalar-prefetch gather)
-- paged_gather  : block-table KV gather for the paged serving layout
-                  (scalar-prefetched table, one page tile per DMA)
+- gvr_topk           : fused Guess-Verify-Refine exact Top-K (VMEM-resident row)
+- indexer_topk       : fused indexer scoring + GVR (scores never touch HBM)
+- sparse_attn        : Top-K gathered decode attention (scalar-prefetch gather)
+- paged_gather       : block-table KV gather for the paged serving layout
+                       (scalar-prefetched table, one page tile per DMA)
+- paged_indexer_topk : block-table-native indexer+GVR — scores physical
+                       pages directly, no logical view (DESIGN.md §paged)
+- paged_sparse_decode_attn : block-table-native sparse attention — the
+                       index_map composes table[idx // page_size] with the
+                       Top-K gather, O(K) traffic independent of N
 
 ops.py exposes the jit'd wrappers; ref.py the pure-jnp oracles.
 """
 
-from .ops import gvr_topk, indexer_topk, paged_gather, sparse_decode_attn
+from .ops import (gvr_topk, indexer_topk, paged_gather, paged_indexer_topk,
+                  paged_sparse_decode_attn, sparse_decode_attn)
 
-__all__ = ["gvr_topk", "indexer_topk", "paged_gather", "sparse_decode_attn"]
+__all__ = ["gvr_topk", "indexer_topk", "paged_gather", "paged_indexer_topk",
+           "paged_sparse_decode_attn", "sparse_decode_attn"]

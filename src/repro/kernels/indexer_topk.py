@@ -17,6 +17,16 @@ N=128K and d_i=128 that is a 1.0 MB saving against 32 MB irreducible, but
 against the *Top-K operator itself* (the paper's unit of account: (I+1)·N·4B)
 it removes the entire score-read stream, i.e. the fused selector rides the
 indexer's required traffic for free.
+
+`paged_indexer_topk_pallas` is the block-table-native variant (DESIGN.md
+§paged): the indexer K cache stays in the serving layer's global page pool
+and the block table is scalar-prefetched, so each grid step DMAs one
+physical (page_size × d_i) page — the kv chunk IS the logical page, the
+index_map does the logical→physical translation, and the contiguous
+logical indexer-K view is never materialized. Scores land in the same
+VMEM scratch (still never HBM) in logical order, so GVR and the emitted
+Top-K indices stay in logical token space — the feedback invariant the
+paged serving layer depends on. Unmapped pages (-1) score the sentinel.
 """
 
 from __future__ import annotations
@@ -27,6 +37,7 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 from .gvr_topk import DEFAULT_CHUNK, gvr_on_resident_row, pltpu_vmem
 
@@ -122,3 +133,117 @@ def indexer_topk_pallas(q: jnp.ndarray, kcache: jnp.ndarray, w: jnp.ndarray,
         ],
         interpret=interpret,
     )(q, kcache, w, prev_idx.astype(jnp.int32), lengths.astype(jnp.int32))
+
+
+# --------------------------------------------------------------------------
+# Block-table-native (paged) variant — scoring reads physical pages, the
+# logical indexer-K view is never materialized.
+# --------------------------------------------------------------------------
+
+def _paged_fused_kernel(table_ref, q_ref, pages_ref, w_ref, prev_ref, len_ref,
+                        out_vals_ref, out_idx_ref, stats_ref,
+                        scores_scr, cand_vals_ref, cand_idx_ref,
+                        out_v_scr, out_i_scr,
+                        *, k, cmax, n, m, page_size, chunk, max_secant,
+                        f_target, mp):
+    b = pl.program_id(0)
+    j = pl.program_id(1)
+    q = q_ref[0]                                           # (H, D)
+    kc = pages_ref[0]                                      # (page_size, D)
+    w = w_ref[0]                                           # (H,)
+    # Eq. 1 on the MXU over one physical page -> (page_size,) logical scores
+    s = jnp.maximum(jnp.dot(q.astype(jnp.float32), kc.astype(jnp.float32).T), 0.0)
+    scores = jnp.dot(w.astype(jnp.float32), s)             # (page_size,)
+    # mask ragged tail AND unmapped pages (-1 sentinel): both score NEG, so
+    # an unmapped page can never be selected
+    length = len_ref[0]
+    pos = (jax.lax.broadcasted_iota(jnp.int32, (1, page_size), 1)[0]
+           + j * page_size)
+    mapped = table_ref[b, j] >= 0
+    scores = jnp.where((pos < length) & mapped, scores, NEG)
+    scores_scr[pl.ds(j * page_size, page_size)] = scores
+
+    @pl.when(j == mp - 1)
+    def _():
+        gvr_on_resident_row(scores_scr[...], prev_ref[0, :],
+                            out_vals_ref, out_idx_ref, stats_ref,
+                            cand_vals_ref, cand_idx_ref, out_v_scr, out_i_scr,
+                            k=k, cmax=cmax, n=n, m=m, chunk=chunk,
+                            max_secant=max_secant, f_target=f_target)
+
+
+def paged_indexer_topk_pallas(q: jnp.ndarray, k_pages: jnp.ndarray,
+                              w: jnp.ndarray, table: jnp.ndarray,
+                              prev_idx: jnp.ndarray, k: int,
+                              *, lengths: Optional[jnp.ndarray] = None,
+                              chunk: int = DEFAULT_CHUNK,
+                              max_candidates: Optional[int] = None,
+                              max_secant_iters: int = 12,
+                              f_target: Optional[int] = None,
+                              interpret: bool = True):
+    """Fused paged indexer+Top-K. q: (B,H,D); k_pages: (P, page_size, D)
+    global indexer-K page pool; table: (B, MP) int32 block table (-1 =
+    unmapped); w: (H,) or (B,H); prev_idx: (B,M) int32 LOGICAL indices;
+    lengths: (B,) int32 (defaults to MP·page_size).
+
+    The grid's kv chunk is the logical page: step (b, j) DMAs physical page
+    table[b, j] (scalar-prefetched index_map), scores it, and appends the
+    scores at logical offset j·page_size in the VMEM scratch. MP·page_size
+    must be a multiple of `chunk` (ops.py pads the table with -1 columns).
+
+    Returns (values (B,K), indices (B,K) int32 — logical, stats (B,8)).
+    """
+    b, h, d = q.shape
+    page_size = k_pages.shape[1]
+    mp = table.shape[1]
+    n = mp * page_size
+    m = prev_idx.shape[-1]
+    assert n % chunk == 0, (n, chunk)
+    if w.ndim == 1:
+        w = jnp.broadcast_to(w[None], (b, h))
+    if lengths is None:
+        lengths = jnp.full((b,), n, jnp.int32)
+    cmax = max_candidates if max_candidates is not None else min(3 * k, n)
+    cmax = max(cmax, k)
+    cpad = ((cmax + chunk - 1) // chunk + 1) * chunk
+    opad = ((k + chunk - 1) // chunk + 1) * chunk
+    ft = f_target if f_target is not None else (k + cmax) // 2
+
+    kern = functools.partial(_paged_fused_kernel, k=k, cmax=cmax, n=n, m=m,
+                             page_size=page_size, chunk=chunk,
+                             max_secant=max_secant_iters, f_target=ft, mp=mp)
+    out_shapes = (
+        jax.ShapeDtypeStruct((b, k), jnp.float32),
+        jax.ShapeDtypeStruct((b, k), jnp.int32),
+        jax.ShapeDtypeStruct((b, 8), jnp.float32),
+    )
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(b, mp),
+        in_specs=[
+            pl.BlockSpec((1, h, d), lambda i, j, t: (i, 0, 0)),
+            # the fused gather: page row index = prefetched table entry
+            # (unmapped entries clip to page 0; their scores are masked)
+            pl.BlockSpec((1, page_size, d),
+                         lambda i, j, t: (jnp.maximum(t[i, j], 0), 0, 0)),
+            pl.BlockSpec((1, h), lambda i, j, t: (i, 0)),
+            pl.BlockSpec((1, m), lambda i, j, t: (i, 0)),
+            pl.BlockSpec((1,), lambda i, j, t: (i,)),
+        ],
+        out_specs=(
+            pl.BlockSpec((1, k), lambda i, j, t: (i, 0)),
+            pl.BlockSpec((1, k), lambda i, j, t: (i, 0)),
+            pl.BlockSpec((1, 8), lambda i, j, t: (i, 0)),
+        ),
+        scratch_shapes=[
+            pltpu_vmem((n,), jnp.float32),        # resident scores (never HBM)
+            pltpu_vmem((cpad,), jnp.float32),
+            pltpu_vmem((cpad,), jnp.float32),
+            pltpu_vmem((opad,), jnp.float32),
+            pltpu_vmem((opad,), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        kern, grid_spec=grid_spec, out_shape=out_shapes, interpret=interpret,
+    )(table.astype(jnp.int32), q, k_pages, w,
+      prev_idx.astype(jnp.int32), lengths.astype(jnp.int32))

@@ -15,9 +15,10 @@ import jax
 import jax.numpy as jnp
 
 from .gvr_topk import DEFAULT_CHUNK, gvr_topk_pallas
-from .indexer_topk import indexer_topk_pallas
+from .indexer_topk import indexer_topk_pallas, paged_indexer_topk_pallas
 from .paged_gather import paged_gather_pallas
-from .sparse_attn import sparse_decode_attn_pallas
+from .sparse_attn import (paged_sparse_decode_attn_pallas,
+                          sparse_decode_attn_pallas)
 
 NEG = -3.4028235e38
 
@@ -116,4 +117,54 @@ def sparse_decode_attn(q: jnp.ndarray, kcache: jnp.ndarray, vcache: jnp.ndarray,
     return sparse_decode_attn_pallas(q, kcache, vcache, idx, scale=scale,
                                      gather_block=gather_block,
                                      gather_mode=gather_mode,
+                                     interpret=interpret)
+
+
+@partial(jax.jit, static_argnames=("scale", "interpret"))
+def paged_sparse_decode_attn(q: jnp.ndarray, k_pages: jnp.ndarray,
+                             v_pages: jnp.ndarray, table: jnp.ndarray,
+                             idx: jnp.ndarray, *,
+                             scale: Optional[float] = None,
+                             interpret: bool = True):
+    """Block-table-native sparse decode attention (B,H,DV).
+
+    The Top-K gather and the logical→physical page translation are fused
+    into one scalar-prefetched index_map: rows DMA straight from the
+    (P, page_size, KVH, D) page pools, the logical view is never built, and
+    entries that are -1-padded OR land on an unmapped (-1) table entry are
+    masked out of the softmax (DESIGN.md §paged).
+    """
+    return paged_sparse_decode_attn_pallas(q, k_pages, v_pages, table, idx,
+                                           scale=scale, interpret=interpret)
+
+
+@partial(jax.jit, static_argnames=("k", "chunk", "interpret"))
+def paged_indexer_topk(q: jnp.ndarray, k_pages: jnp.ndarray, w: jnp.ndarray,
+                       table: jnp.ndarray, prev_idx: jnp.ndarray, k: int,
+                       *, lengths: Optional[jnp.ndarray] = None,
+                       chunk: int = DEFAULT_CHUNK,
+                       interpret: bool = True):
+    """Fused paged indexer scoring + GVR Top-K over a block table.
+
+    The kv chunk is the logical page: the kernel scores physical pages
+    addressed by the scalar-prefetched table, so neither the logical
+    indexer-K view nor the score row ever touches HBM. Indices in and out
+    are LOGICAL token positions. The table is padded here with -1 columns
+    (scored as the sentinel) so MP·page_size meets the GVR chunk lattice.
+    """
+    b = q.shape[0]
+    page_size = k_pages.shape[1]
+    mp = table.shape[1]
+    n = mp * page_size
+    # the GVR compaction needs chunk % 32 == 0 and n % chunk == 0
+    chunk = max(32, (min(chunk, n) // 32) * 32)
+    mp_pad = mp
+    while (mp_pad * page_size) % chunk:
+        mp_pad += 1
+    if mp_pad != mp:
+        table = jnp.pad(table, ((0, 0), (0, mp_pad - mp)), constant_values=-1)
+    if lengths is None:
+        lengths = jnp.full((b,), n, jnp.int32)
+    return paged_indexer_topk_pallas(q, k_pages, w, table, prev_idx, k,
+                                     lengths=lengths, chunk=chunk,
                                      interpret=interpret)

@@ -13,7 +13,13 @@ layout-independent).
 
 This is the per-device hot-spot form; the model layer's `serve_step_paged`
 uses the equivalent XLA gather (`pages[clip(table)]`) which the dry-run
-lowers — ref.py's `paged_gather_ref` is the shared oracle for both.
+lowers — ref.py's `paged_gather_ref` is the shared oracle for both. Since
+the block-table-native refactor (DESIGN.md §paged) the *default* decode
+path only materializes the small indexer-K view this way; the K/V logical
+views are skipped entirely — attention gathers its Top-K rows directly
+via `paged_sparse_decode_attn` (sparse_attn.py), and this whole-view
+gather remains for the `paged_attn="gather"` oracle and the dense
+pre-DSA fallback.
 """
 
 from __future__ import annotations

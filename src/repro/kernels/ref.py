@@ -41,6 +41,38 @@ def paged_gather_ref(pages: jnp.ndarray, table: jnp.ndarray) -> jnp.ndarray:
     return jnp.where((table >= 0)[:, :, None, None], out, 0)
 
 
+def paged_attn_ref(q: jnp.ndarray, k_pages: jnp.ndarray, v_pages: jnp.ndarray,
+                   table: jnp.ndarray, idx: jnp.ndarray, scale=None):
+    """Block-table-native sparse decode attention oracle.
+
+    q: (B, H, D); k/v_pages: (P, page_size, KVH, D[v]) global page pools;
+    table: (B, MP) int32 block table (-1 = unmapped); idx: (B, K) int32
+    LOGICAL Top-K indices (-1-padded). An entry contributes iff idx >= 0 AND
+    its logical page is mapped; everything else is masked to -inf before
+    the softmax. Returns (B, H, DV) f32 — bit-comparable to
+    `sparse_decode_attn_ref` over the materialized logical view.
+    """
+    b, h, d = q.shape
+    p, page_size, kvh = k_pages.shape[:3]
+    mp = table.shape[1]
+    n = mp * page_size
+    scale = scale if scale is not None else 1.0 / jnp.sqrt(d)
+    li = jnp.clip(idx, 0, n - 1)
+    phys = jnp.take_along_axis(table, li // page_size, axis=1)  # (B, K)
+    valid = (idx >= 0) & (phys >= 0)
+    flat = jnp.clip(phys, 0, p - 1) * page_size + li % page_size
+    kg = k_pages.reshape((p * page_size,) + k_pages.shape[2:])[flat]  # (B,K,KVH,D)
+    vg = v_pages.reshape((p * page_size,) + v_pages.shape[2:])[flat]
+    group = h // kvh
+    kq = kg[:, :, (jnp.arange(h) // group), :]                        # (B,K,H,D)
+    vq = vg[:, :, (jnp.arange(h) // group), :]
+    logits = jnp.einsum("bhd,bkhd->bhk", q.astype(jnp.float32),
+                        kq.astype(jnp.float32)) * scale
+    logits = jnp.where(valid[:, None, :], logits, -jnp.inf)
+    pr = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("bhk,bkhd->bhd", pr, vq.astype(jnp.float32))
+
+
 def sparse_decode_attn_ref(q: jnp.ndarray, kcache: jnp.ndarray, vcache: jnp.ndarray,
                            idx: jnp.ndarray, counts=None, scale=None):
     """Sparse decode attention oracle: attend only over gathered Top-K rows.

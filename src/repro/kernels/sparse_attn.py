@@ -16,8 +16,19 @@ Index granularity is `gather_block` consecutive Top-K entries per grid step
 we note this in DESIGN.md §adaptation — the dry-run/roofline path uses the
 XLA gather in the model layer, while this kernel is the TPU hot-spot form.
 
+`paged_sparse_decode_attn_pallas` is the block-table-native variant
+(DESIGN.md §paged): the caches stay in the serving layer's global page
+pools and the index_map *composes* the logical→physical translation with
+the Top-K gather — page `table[b, idx // page_size]`, offset
+`idx % page_size` — so each grid step DMAs one (KVH × D) row straight out
+of the page pool and the contiguous (B, MP·page_size, ...) logical view is
+never built. Per-tick gathered KV traffic is O(K), independent of context
+length N.
+
 Padding contract: invalid idx entries are < 0 — the wrapper clips them for
-addressing and masks their logits to -inf.
+addressing and masks their logits to -inf. The paged variant additionally
+masks entries whose logical page is unmapped (table entry < 0, the -1
+sentinel), so an unmapped page can never contribute to the softmax.
 """
 
 from __future__ import annotations
@@ -147,3 +158,116 @@ def sparse_decode_attn_pallas(q: jnp.ndarray, kcache: jnp.ndarray,
     out_shape = jax.ShapeDtypeStruct((b, h, dv), jnp.float32)
     return pl.pallas_call(kern, grid_spec=grid_spec, out_shape=out_shape,
                           interpret=interpret)(idx_pref, q, kv_in, vv_in)
+
+
+# --------------------------------------------------------------------------
+# Block-table-native (paged) variant — the page gather is fused into the
+# attention DMA; the logical KV view is never materialized.
+# --------------------------------------------------------------------------
+
+def _paged_attn_kernel(table_ref, idx_ref, q_ref, k_ref, v_ref, o_ref,
+                       m_scr, l_scr, acc_scr, *, nsteps, kk, scale, h, kvh,
+                       dv, page_size, n_logical):
+    b = pl.program_id(0)
+    j = pl.program_id(1)
+    g = h // kvh
+
+    @pl.when(j == 0)
+    def _():
+        m_scr[...] = jnp.full_like(m_scr[...], -jnp.inf)
+        l_scr[...] = jnp.zeros_like(l_scr[...])
+        acc_scr[...] = jnp.zeros_like(acc_scr[...])
+
+    q = q_ref[0].astype(jnp.float32)                     # (H, D)
+    kb = k_ref[0, 0].astype(jnp.float32)                 # (KVH, D)
+    vb = v_ref[0, 0].astype(jnp.float32)                 # (KVH, DV)
+
+    # validity: a Top-K entry contributes iff it is non-negative AND its
+    # logical page is mapped (-1 sentinel ⇒ masked, never addressed)
+    li = idx_ref[b, j]
+    li_safe = jnp.clip(li, 0, n_logical - 1)
+    valid = (li >= 0) & (table_ref[b, li_safe // page_size] >= 0)
+
+    # logits[h] = scale * q[h] · kb[h // g]  — one gathered token
+    qg = q.reshape(kvh, g, -1)
+    logits = jnp.einsum("khd,kd->kh", qg, kb).reshape(h, 1) * scale
+    logits = jnp.where(valid, logits, -jnp.inf)
+
+    m_prev = m_scr[...]                                   # (H, 1)
+    l_prev = l_scr[...]
+    m_new = jnp.maximum(m_prev, logits)
+    m_safe = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+    alpha = jnp.where(jnp.isfinite(m_prev), jnp.exp(m_prev - m_safe), 0.0)
+    p = jnp.exp(jnp.where(jnp.isfinite(logits), logits - m_safe, -jnp.inf))
+    p = jnp.where(jnp.isfinite(logits), p, 0.0)           # (H, 1)
+    l_scr[...] = l_prev * alpha + p
+    pv = jnp.einsum("kg,kd->kgd", p.reshape(kvh, g), vb).reshape(h, dv)
+    acc_scr[...] = acc_scr[...] * alpha + pv
+    m_scr[...] = m_new
+
+    @pl.when(j == nsteps - 1)
+    def _():
+        l = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0] = (acc_scr[...] / l).astype(o_ref.dtype)
+
+
+def paged_sparse_decode_attn_pallas(q: jnp.ndarray, k_pages: jnp.ndarray,
+                                    v_pages: jnp.ndarray, table: jnp.ndarray,
+                                    idx: jnp.ndarray, *,
+                                    scale: Optional[float] = None,
+                                    interpret: bool = True):
+    """q: (B,H,D); k/v_pages: (P, page_size, KVH, D[v]) global page pools;
+    table: (B, MP) int32 block table (-1 = unmapped); idx: (B,K) int32
+    LOGICAL Top-K indices, -1-padded.
+
+    Both the block table and the Top-K indices are scalar-prefetched; the
+    BlockSpec index_map composes the two lookups, so the DMA engine gathers
+    physical row (table[b, idx // page_size], idx % page_size) directly —
+    no intermediate logical view, O(K) HBM traffic per query.
+
+    Returns (B, H, DV) f32 attention output over the selected tokens only.
+    """
+    b, h, d = q.shape
+    p_pages, page_size, kvh = k_pages.shape[:3]
+    dv = v_pages.shape[-1]
+    mp = table.shape[1]
+    n_logical = mp * page_size
+    kk = idx.shape[-1]
+    scale = scale if scale is not None else 1.0 / (d ** 0.5)
+
+    table = table.astype(jnp.int32)
+    idx = idx.astype(jnp.int32)
+
+    def _phys(i, j, table_ref, idx_ref):
+        # logical→physical translation *inside the index_map*: the
+        # prefetched table entry addresses the page, the index remainder
+        # addresses the row within it (invalid entries clip to (0, 0) —
+        # they are masked in the kernel body, never read semantically)
+        li = jnp.clip(idx_ref[i, j], 0, n_logical - 1)
+        pg = jnp.maximum(table_ref[i, li // page_size], 0)
+        return pg, li % page_size
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(b, kk),
+        in_specs=[
+            pl.BlockSpec((1, h, d), lambda i, j, t, x: (i, 0, 0)),
+            pl.BlockSpec((1, 1, kvh, d),
+                         lambda i, j, t, x: _phys(i, j, t, x) + (0, 0)),
+            pl.BlockSpec((1, 1, kvh, dv),
+                         lambda i, j, t, x: _phys(i, j, t, x) + (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, h, dv), lambda i, j, t, x: (i, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((h, 1), jnp.float32),
+            pltpu.VMEM((h, 1), jnp.float32),
+            pltpu.VMEM((h, dv), jnp.float32),
+        ],
+    )
+
+    kern = functools.partial(_paged_attn_kernel, nsteps=kk, kk=kk, scale=scale,
+                             h=h, kvh=kvh, dv=dv, page_size=page_size,
+                             n_logical=n_logical)
+    out_shape = jax.ShapeDtypeStruct((b, h, dv), jnp.float32)
+    return pl.pallas_call(kern, grid_spec=grid_spec, out_shape=out_shape,
+                          interpret=interpret)(table, idx, q, k_pages, v_pages)

@@ -93,13 +93,19 @@ class Model:
         return fn(self.cfg) if fn is not None else None
 
     def serve_step_paged(self, params, state, tokens, *, min_write_pos=None,
-                         mesh=None, rules=None):
+                         paged_attn="fused", mesh=None, rules=None):
+        """One paged decode step. `paged_attn` selects the sparse-attention
+        form: "fused" (block-table-native, O(K) gathered KV traffic —
+        default) or "gather" (materialize the logical view first; the PR-2
+        oracle). Both are bit-identical — see transformer.serve_step_paged.
+        """
         fn = getattr(self.mod, "serve_step_paged", None)
         if fn is None:
             raise NotImplementedError(
                 f"family {self.cfg.family!r} has no paged serve_step")
         return fn(params, state, tokens, self.cfg,
-                  min_write_pos=min_write_pos, mesh=mesh, rules=rules)
+                  min_write_pos=min_write_pos, paged_attn=paged_attn,
+                  mesh=mesh, rules=rules)
 
     def serve_step(self, params, state, tokens, *, mesh=None, rules=None,
                    seq_sharded: bool = False):

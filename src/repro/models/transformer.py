@@ -320,20 +320,23 @@ def _project_qkv(p, h, b, positions, cfg: ModelConfig, rules):
 
 
 def _attend_decode(p, h, q, kc, vc, idx_kc, prev_topk, topk_valid, new_len,
-                   cfg: ModelConfig, use_dsa: bool, rules, mesh):
-    """Shared decode-attention core over a *logical* contiguous cache view.
+                   cfg: ModelConfig, use_dsa: bool, rules, mesh, paged=None):
+    """Shared decode-attention core.
 
-    Identical for both cache layouts: the dense layout passes its cache rows
-    directly, the paged layout passes the page-gathered view. Everything
-    downstream of this point — indexer scores, Top-K selection, the
-    prev-Top-K feedback and the sel_gvr telemetry — therefore lives in
-    logical token space and never sees a physical page id (the layout
-    invariant GVR's temporal prediction depends on)."""
+    Scoring/selection always run over a *logical* contiguous indexer view:
+    everything downstream of this point — indexer scores, Top-K selection,
+    the prev-Top-K feedback and the sel_gvr telemetry — lives in logical
+    token space and never sees a physical page id (the layout invariant
+    GVR's temporal prediction depends on). The attention gather has two
+    physical forms: the dense layout (and the paged "gather" oracle) passes
+    contiguous K/V views via `kc`/`vc`; the paged "fused" path passes
+    `paged=(k_pages, v_pages, page_table)` instead and attention pulls its
+    Top-K rows straight from the page pools (`dsa_decode_paged`) — same
+    bits, O(K) instead of O(N) gathered KV traffic."""
     hd = cfg.hd
     out = {}
     if use_dsa:
-        res = dsa_mod.dsa_decode(
-            q, kc, vc, p["indexer"], h, idx_kc, prev_topk, new_len,
+        dsa_kw = dict(
             k=prev_topk.shape[-1], scale=hd ** -0.5,
             heads=cfg.dsa.indexer_heads, dim=cfg.dsa.indexer_dim,
             rope_base=cfg.rope_base, selector=cfg.dsa.selector,
@@ -341,6 +344,15 @@ def _attend_decode(p, h, q, kc, vc, idx_kc, prev_topk, topk_valid, new_len,
             max_candidates=cfg.dsa.max_candidates,
             gate_max_n=cfg.dsa.gate_max_n, min_n=cfg.dsa.min_n,
             swa_window=cfg.swa_window, rules=rules, mesh=mesh)
+        if paged is not None:
+            kp, vp, table = paged
+            res = dsa_mod.dsa_decode_paged(
+                q, kp, vp, table, p["indexer"], h, idx_kc, prev_topk,
+                new_len, **dsa_kw)
+        else:
+            res = dsa_mod.dsa_decode(
+                q, kc, vc, p["indexer"], h, idx_kc, prev_topk, new_len,
+                **dsa_kw)
         attn = res.attn_out
         out["prev_topk"] = res.topk_idx
         if topk_valid is not None:
@@ -452,12 +464,17 @@ def serve_step(params, state, tokens, cfg: ModelConfig, *, mesh=None,
 # page table translating logical token positions to physical pages
 # (serve.paged owns allocation, ref-counts and shared-prefix admission).
 # Each step scatters the new token's K/V (and indexer-K) rows into the
-# slot's current page, gathers the slot's pages back into a contiguous
-# *logical* view, and runs the exact same `_attend_decode` core as the
-# dense layout — so Top-K indices, the prev-Top-K feedback buffer and all
+# slot's current page and runs the same `_attend_decode` core as the dense
+# layout. The sparse-attention stage is block-table-native by default
+# (`paged_attn="fused"`): Top-K selection happens on the logical indexer
+# view, then attention gathers exactly the selected rows straight from the
+# page pools — the big K/V logical views are never materialized
+# (`paged_attn="gather"` keeps the PR-2 materialize-then-attend oracle).
+# Either way Top-K indices, the prev-Top-K feedback buffer and all
 # selector telemetry stay in logical token space, and a request decodes
-# bit-identically under either layout. All shapes are static: the tick
-# never recompiles across admissions, evictions or page-table changes.
+# bit-identically under either layout (and either paged_attn mode). All
+# shapes are static: the tick never recompiles across admissions,
+# evictions or page-table changes.
 
 # min_write_pos sentinel larger than any position: the row never writes.
 # Rows whose write is masked (inactive slots, shared-prefix replay over
@@ -518,18 +535,34 @@ def paged_state_batch_axes(cfg: ModelConfig) -> Dict[str, int]:
 
 def serve_step_paged(params, state, tokens, cfg: ModelConfig, *,
                      min_write_pos: Optional[jnp.ndarray] = None,
+                     paged_attn: str = "fused",
                      mesh=None, rules: Optional[MeshRules] = None):
     """One paged decode step. tokens: (B,) int32. Returns (logits, state).
 
     Mirrors `serve_step` exactly, with the logical→physical translation at
     the cache boundary: the new token's rows scatter into
-    `page_table[b, length // page_size]` at offset `length % page_size`,
-    and attention/DSA run over the page-gathered logical view (identical
-    values AND identical shapes to the dense cache, so logits match bit for
-    bit). `min_write_pos` (B,) suppresses the cache write for rows whose
+    `page_table[b, length // page_size]` at offset `length % page_size`.
+    `min_write_pos` (B,) suppresses the cache write for rows whose
     position is below it (redirected to the sink page): the engine uses it
     to mask inactive slots and to replay the last prompt token over a
     shared prefix without copy-on-writing the shared page.
+
+    `paged_attn` picks the physical form of the sparse-attention stage
+    (DESIGN.md §paged) — both are bit-identical in tokens, logits, Top-K
+    indices and selector telemetry:
+
+    * "fused" (default) — block-table-native: Top-K selection runs on the
+      logical indexer view (O(N·d_i), the irreducible indexer read), then
+      attention gathers exactly the K selected rows straight from the
+      global K/V page pools via `table[b, idx // page_size]` — the
+      (B, MP·page_size, KVH, HD) logical K/V views are never built, so
+      per-tick gathered KV traffic is O(K), independent of context length.
+    * "gather" — the PR-2 oracle path: materialize the full logical K/V
+      views first (O(N) traffic), then run the identical logical-view
+      attention. Kept as the reference the fused path is pinned against.
+
+    Either way the prev-Top-K feedback stays in logical token space, so
+    warm/cold dispatch and the dense-layout bit-exactness are untouched.
     """
     b = tokens.shape[0]
     hd = cfg.hd
@@ -550,12 +583,23 @@ def serve_step_paged(params, state, tokens, cfg: ModelConfig, *,
     if min_write_pos is not None:
         writable &= positions >= min_write_pos
     dest = jnp.where(writable, phys, sink)
-    # unmapped logical pages gather page 0 — garbage rows, dead beyond
-    # `length` under the NEG_SENTINEL masking convention (finite values, so
-    # their post-mask contribution is exactly zero, as in the dense layout)
+    # `gather` materializes a logical view: unmapped pages clip to page 0 —
+    # garbage rows, dead beyond `length` under the NEG_SENTINEL masking
+    # convention (finite values, so their post-mask contribution is exactly
+    # zero, as in the dense layout). Under the default fused path this is
+    # only used for the indexer-K view (and the dense pre-DSA fallback);
+    # attention itself never builds a logical view — it addresses the page
+    # pools through the raw table, masking the -1 sentinel explicitly
+    # (dsa_sparse_attention_paged / kernels.paged_sparse_decode_attn).
     gather = jnp.clip(table, 0, sink)
 
+    if paged_attn not in ("fused", "gather"):
+        raise ValueError(f"unknown paged_attn {paged_attn!r} "
+                         f"(expected 'fused' or 'gather')")
     use_dsa = cfg.dsa.enabled and n > cfg.dsa.min_n
+    # the fused form only applies to the sparse (DSA) stage; the dense
+    # fallback attends over every cached row, which *is* the logical view
+    fused = paged_attn == "fused" and use_dsa
 
     def layer(x, carry):
         p = carry["p"]
@@ -567,10 +611,13 @@ def serve_step_paged(params, state, tokens, cfg: ModelConfig, *,
         q, kn, vn = _project_qkv(p, h, b, positions, cfg, rules)
         kp = kp.at[dest, off].set(kn.astype(kp.dtype))
         vp = vp.at[dest, off].set(vn.astype(vp.dtype))
-        kc = kp[gather].reshape(b, n, cfg.n_kv_heads, hd)
-        vc = vp[gather].reshape(b, n, cfg.n_kv_heads, hd)
-        kc = constrain(kc, rules, "batch", None, None, None)
-        vc = constrain(vc, rules, "batch", None, None, None)
+        if fused:
+            kc = vc = None            # K/V logical views intentionally unbuilt
+        else:
+            kc = kp[gather].reshape(b, n, cfg.n_kv_heads, hd)
+            vc = vp[gather].reshape(b, n, cfg.n_kv_heads, hd)
+            kc = constrain(kc, rules, "batch", None, None, None)
+            vc = constrain(vc, rules, "batch", None, None, None)
 
         out = {"k_pages": kp, "v_pages": vp, "p": p}
         idx_kc = None
@@ -579,12 +626,16 @@ def serve_step_paged(params, state, tokens, cfg: ModelConfig, *,
                                    dim=cfg.dsa.indexer_dim,
                                    rope_base=cfg.rope_base)
             idx_kp = idx_kp.at[dest, off].set(ik.astype(idx_kp.dtype))
+            # the indexer scores all N tokens (paper Table 2: irreducible
+            # O(N·d_i)), so its logical view costs what scoring in page
+            # space would — and keeps scores/Top-K in logical order
             idx_kc = idx_kp[gather].reshape(b, n, cfg.dsa.indexer_dim)
         if idx_kp is not None:
             out["idx_k_pages"] = idx_kp
         attn, extras = _attend_decode(p, h, q, kc, vc, idx_kc, prev_topk,
                                       topk_valid, new_len, cfg, use_dsa,
-                                      rules, mesh)
+                                      rules, mesh,
+                                      paged=(kp, vp, table) if fused else None)
         out.update(extras)
         attn = attn.reshape(b, cfg.n_heads * hd).astype(x.dtype)
         x = x + attn @ p["wo"]

@@ -52,6 +52,14 @@ cache, admission fails over to queueing under page pressure, and DECODE
 slots preempt the lowest-priority PREFILL slot rather than deadlock.
 Decode stays bit-identical to the dense layout (the Top-K/feedback state
 is logical-space; see `serve.paged`'s module docstring).
+
+The sparse-attention stage inside the paged step is block-table-native
+by default (`paged_attn="fused"`): attention gathers its Top-K rows
+straight from the page pools through the logical→physical translation,
+so the contiguous logical K/V views are never materialized and per-tick
+gathered KV traffic is O(K) rather than O(N). `paged_attn="gather"`
+keeps the materialize-then-attend oracle; both modes are pinned
+bit-identical (DESIGN.md §paged, tests/test_paged_attn.py).
 """
 
 from .engine import DecodeEngine, EngineReport, Request

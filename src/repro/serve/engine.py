@@ -24,6 +24,23 @@ opens) — taken from the selector's own per-row report, not inferred.
 adjacent (their first tick can never be warm), so `gvr_hit_rate` is
 defined over decode ticks only.
 
+Slot lifecycle (one request, see also serve.scheduler):
+
+    QUEUED → [admit: slot reset, feedback re-seeded cold] → PREFILL
+           → [first tick after admission is always cold — the selector's
+              per-row canUseHeuristic is false until genuine feedback
+              lands one tick later] → DECODE (warm steady state)
+           → [evict on eos/max_new_tokens: pages released, feedback row
+              poisoned so no prediction leaks to the slot's successor]
+           → DONE
+
+Preemption order (paged layout, under page pressure): reclaim cold
+prefix-cache pages first; then preempt the PREFILL slot with the most
+remaining prompt tokens (least sunk cost, ties toward the latest
+admission); only if every other slot is decoding, preempt the DECODE slot
+with the fewest generated tokens. The victim returns to the FRONT of the
+queue and replays deterministically.
+
 KV layouts (`kv_layout`):
 
 * "dense" — per-slot `(num_slots, max_len)` caches (PR 1 behavior).
@@ -37,6 +54,11 @@ KV layouts (`kv_layout`):
   poisoned, request re-queued at the front) instead of deadlocking. Decode
   is bit-identical to the dense layout for the same trace — Top-K and the
   GVR feedback buffer live in logical token space (see serve.paged).
+  `paged_attn` picks the sparse-attention form inside the step: "fused"
+  (default) is block-table-native — attention gathers its Top-K rows
+  straight from the page pools, O(K) traffic per tick — while "gather"
+  materializes the contiguous logical view first (the PR-2 oracle both
+  modes are pinned bit-identical against; see DESIGN.md §paged).
 
 Bit-exactness: every per-slot computation in `serve_step` is row-parallel
 (attention, norms, projections act per batch row), so a request decoded in
@@ -98,6 +120,29 @@ class Request:                         # queue must never compare ndarray fields
 
 @dataclasses.dataclass
 class EngineReport:
+    """One `run()` window's telemetry (the engine may be reused; every
+    field is a delta over that window, not a lifetime total).
+
+    * `ticks` / `wall_s` — engine ticks driven and wall-clock seconds.
+    * `decoded_tokens` / `prefill_tokens` — DELIVERED work only: a
+      preempted pass's tokens are rolled back when the request re-queues
+      (its method_log entries stay — those selector invocations really
+      ran, so per-tick cost telemetry keeps them).
+    * `completed` — requests that reached DONE inside the window.
+    * `method_counts` — selector path (`gvr`/`radix`/`exact`/`dense`) per
+      served slot-tick, both phases combined; `prefill_method_counts` /
+      `decode_method_counts` split it by phase and partition it exactly.
+    * `gvr_hit_rate` (property) — GVR coverage of DECODE ticks ONLY. The
+      first chunk after an admission can never be warm, so folding prefill
+      in would dilute the steady-state serving metric; prefill coverage is
+      `prefill_gvr_hit_rate`.
+    * `preemptions` — slots evicted back to the queue under page pressure.
+    * `prefix_hit_tokens` — prompt tokens served from the prefix cache
+      instead of being streamed (paged layout only).
+    * `peak_page_utilization` — max pages_in_use / num_pages over the
+      window's ticks, re-baselined to the live state at `run()` entry
+      (paged layout only; 0.0 for dense).
+    """
     ticks: int
     wall_s: float
     decoded_tokens: int
@@ -138,9 +183,13 @@ class DecodeEngine:
                  prefill_chunk: int = 8, scheduler="fifo",
                  eos_id: Optional[int] = None, record_logits: bool = False,
                  kv_layout: str = "dense", page_size: int = 16,
-                 num_pages: Optional[int] = None, prefix_caching: bool = True):
+                 num_pages: Optional[int] = None, prefix_caching: bool = True,
+                 paged_attn: str = "fused"):
         if kv_layout not in ("dense", "paged"):
             raise ValueError(f"unknown kv_layout {kv_layout!r}")
+        if paged_attn not in ("fused", "gather"):
+            raise ValueError(f"unknown paged_attn {paged_attn!r} "
+                             f"(expected 'fused' or 'gather')")
         self.model = model
         self.params = params
         self.cfg = model.cfg
@@ -150,6 +199,7 @@ class DecodeEngine:
         self.eos_id = eos_id
         self.record_logits = record_logits
         self.kv_layout = kv_layout
+        self.paged_attn = paged_attn
         self.scheduler: Scheduler = (scheduler if isinstance(scheduler, Scheduler)
                                      else make_scheduler(scheduler))
         self.pool = FeedbackPool(model, self.num_slots)
@@ -218,7 +268,8 @@ class DecodeEngine:
         """Layout dispatch: one model step over the given (sub-)pool."""
         if self.kv is not None:
             return self.model.serve_step_paged(params, state, tokens,
-                                               min_write_pos=min_write_pos)
+                                               min_write_pos=min_write_pos,
+                                               paged_attn=self.paged_attn)
         return self.model.serve_step(params, state, tokens)
 
     def _tick_impl(self, params, state, tokens, active):
@@ -558,6 +609,12 @@ class DecodeEngine:
         for r in (requests or []):
             self.submit(r)
         t0 = time.perf_counter()
+        # peak counters are per-run-window, like every other report field:
+        # re-baseline them to the engine's current live state (an engine
+        # reused across runs would otherwise report the old window's peak)
+        self.peak_occupancy = sum(r is not None for r in self.slots)
+        self.peak_pages_in_use = (self.kv.pool.pages_in_use
+                                  if self.kv is not None else 0)
         start_tick = self.tick_count
         start_decoded = self.decoded_tokens
         start_prefill = self.prefill_tokens

@@ -10,12 +10,24 @@ The XLA path here is what the distributed dry-run lowers; the Pallas
 kernels (repro.kernels) are the per-device hot-spot implementations of the
 same three stages, validated against the refs in kernels/ref.py.
 
-Caches arrive here as contiguous *logical* views — under the paged serving
-layout the gather from the page pool happens in `serve_step_paged` before
-this module runs, so `prev_topk` (the temporal feedback buffer) and
-`topk_idx` are logical token positions regardless of the physical KV
-layout. Do not thread physical page ids into this pipeline: GVR's
-temporal-correlation warm start is only meaningful in logical space.
+Indices live in *logical* token space end to end — `prev_topk` (the
+temporal feedback buffer) and `topk_idx` are positions within the
+request's own context regardless of the physical KV layout. Do not thread
+physical page ids into this pipeline: GVR's temporal-correlation warm
+start is only meaningful in logical space.
+
+Two physical forms of the sparse-attention stage share the scoring/select
+front half (`dsa_select`):
+
+* `dsa_decode` — caches arrive as contiguous logical views (the dense
+  serving layout, or the paged layout's `paged_attn="gather"` oracle path
+  which materializes the view first);
+* `dsa_decode_paged` — block-table-native (DESIGN.md §paged): attention
+  gathers exactly the Top-K rows straight from the global page pools via
+  the logical→physical translation `table[b, idx // page_size]`, offset
+  `idx % page_size`. The logical K/V views are never built, so per-step
+  gathered KV traffic is O(K) instead of O(N). Selection itself still
+  consumes logical-view indexer scores, so both forms are bit-identical.
 """
 
 from __future__ import annotations
@@ -122,6 +134,82 @@ def dsa_sparse_attention(q: jnp.ndarray, kcache: jnp.ndarray, vcache: jnp.ndarra
     return out.reshape(b, h, hd)
 
 
+def dsa_sparse_attention_paged(q: jnp.ndarray, k_pages: jnp.ndarray,
+                               v_pages: jnp.ndarray, table: jnp.ndarray,
+                               topk_idx: jnp.ndarray, lengths: jnp.ndarray,
+                               *, scale: float, rules=None) -> jnp.ndarray:
+    """Block-table-native sparse attention (XLA gather form of the fused
+    Pallas kernel `kernels.paged_sparse_decode_attn`).
+
+    q: (B,H,HD); k/v_pages: (P, page_size, KVH, HD) global page pools;
+    table: (B, MP) int32 block table (-1 = unmapped); topk_idx: (B,K)
+    LOGICAL indices. The logical→physical translation is composed with the
+    Top-K gather, so exactly K (KVH × HD) rows move per query — O(K)
+    traffic independent of the logical extent MP·page_size — and the
+    contiguous logical K/V views are never materialized.
+
+    Masking: an entry contributes iff idx ∈ [0, length) AND its page is
+    mapped. For in-length indices the page is always mapped (the serving
+    layer maps pages up to `length` before the step), so for identical
+    page contents this is bit-identical to `dsa_sparse_attention` over the
+    materialized logical view — same gathered values at unmasked positions,
+    same NEG sentinel at masked ones, same reduction shapes/order.
+    """
+    b, h, hd = q.shape
+    p, page_size, kvh = k_pages.shape[:3]
+    g = h // kvh
+    n = table.shape[1] * page_size
+    from repro.parallel.sharding import constrain
+    # same partitioning discipline as the logical-view path: q pinned
+    # batch-only so head sharding can't propagate into the (pool-global,
+    # replicated) page arrays through the gather
+    q = constrain(q, rules, "batch", None, None)
+    li = jnp.clip(topk_idx, 0, n - 1)
+    phys = jnp.take_along_axis(table, li // page_size, axis=1)     # (B, K)
+    valid = ((topk_idx >= 0) & (topk_idx < lengths[:, None])
+             & (phys >= 0))
+    flat = jnp.clip(phys, 0, p - 1) * page_size + li % page_size   # (B, K)
+    kg = k_pages.reshape((p * page_size,) + k_pages.shape[2:])[flat]
+    vg = v_pages.reshape((p * page_size,) + v_pages.shape[2:])[flat]
+    # resharding (for TP heads) happens on the small (B,K) gathered rows,
+    # never on the page pool — mirrors dsa_sparse_attention
+    kg = constrain(kg, rules, "batch", None, None, None)
+    vg = constrain(vg, rules, "batch", None, None, None)
+    logits = jnp.einsum("bkgd,bskd->bkgs", q.reshape(b, kvh, g, hd), kg,
+                        preferred_element_type=jnp.float32) * scale
+    logits = jnp.where(valid[:, None, None, :], logits, NEG)
+    pr = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bkgs,bskd->bkgd", pr.astype(vg.dtype), vg,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(b, h, hd)
+
+
+def dsa_select(indexer_params, x: jnp.ndarray, idx_kcache: jnp.ndarray,
+               prev_topk: jnp.ndarray, lengths: jnp.ndarray,
+               *, k: int, heads: int, dim: int, rope_base: float,
+               selector: str = "auto",
+               prev_valid: Optional[jnp.ndarray] = None,
+               max_candidates: Optional[int] = None,
+               gate_max_n: int = 200_000, min_n: int = 4096,
+               swa_window: Optional[int] = None, rules=None, mesh=None):
+    """Indexer scoring + Top-K selection (the layout-independent front half
+    of the DSA pipeline — shared by the logical-view and paged attention
+    forms, which is what keeps them bit-identical)."""
+    positions = lengths - 1
+    scores = indexer_scores(indexer_params, x, idx_kcache, positions, lengths,
+                            heads=heads, dim=dim, rope_base=rope_base,
+                            rules=rules)
+    if swa_window is not None:
+        # SWA interplay: selection restricted to the attention window
+        pos = jnp.arange(scores.shape[-1], dtype=jnp.int32)
+        in_win = pos[None, :] > (lengths[:, None] - 1 - swa_window)
+        scores = jnp.where(in_win, scores, NEG)
+    return select_topk(scores, k, prev_idx=prev_topk, prev_valid=prev_valid,
+                       method=selector,
+                       max_candidates=max_candidates, gate_max_n=gate_max_n,
+                       min_n_for_selection=min_n, mesh=mesh)
+
+
 def dsa_decode(q: jnp.ndarray, kcache: jnp.ndarray, vcache: jnp.ndarray,
                indexer_params, x: jnp.ndarray, idx_kcache: jnp.ndarray,
                prev_topk: jnp.ndarray, lengths: jnp.ndarray,
@@ -133,25 +221,49 @@ def dsa_decode(q: jnp.ndarray, kcache: jnp.ndarray, vcache: jnp.ndarray,
                min_n: int = 4096,
                swa_window: Optional[int] = None, rules=None,
                mesh=None) -> DSAOutput:
-    """Full DSA decode step for one layer (indexer → select → sparse attn).
+    """Full DSA decode step for one layer (indexer → select → sparse attn)
+    over contiguous logical K/V views.
 
     `prev_valid` (B,) marks which rows carry genuine previous-step feedback;
     under `selector="auto"` rows without it dispatch through the non-GVR
     fallback (continuous-batching cold slots — see selector.select_topk).
     """
-    positions = lengths - 1
-    scores = indexer_scores(indexer_params, x, idx_kcache, positions, lengths,
-                            heads=heads, dim=dim, rope_base=rope_base,
-                            rules=rules)
-    if swa_window is not None:
-        # SWA interplay: selection restricted to the attention window
-        pos = jnp.arange(scores.shape[-1], dtype=jnp.int32)
-        in_win = pos[None, :] > (lengths[:, None] - 1 - swa_window)
-        scores = jnp.where(in_win, scores, NEG)
-    sel = select_topk(scores, k, prev_idx=prev_topk, prev_valid=prev_valid,
-                      method=selector,
-                      max_candidates=max_candidates, gate_max_n=gate_max_n,
-                      min_n_for_selection=min_n, mesh=mesh)
+    sel = dsa_select(indexer_params, x, idx_kcache, prev_topk, lengths,
+                     k=k, heads=heads, dim=dim, rope_base=rope_base,
+                     selector=selector, prev_valid=prev_valid,
+                     max_candidates=max_candidates, gate_max_n=gate_max_n,
+                     min_n=min_n, swa_window=swa_window, rules=rules,
+                     mesh=mesh)
     out = dsa_sparse_attention(q, kcache, vcache, sel.indices, lengths,
                                scale=scale, rules=rules)
+    return DSAOutput(out, sel.indices, sel.secant_iters, sel.gvr_rows)
+
+
+def dsa_decode_paged(q: jnp.ndarray, k_pages: jnp.ndarray,
+                     v_pages: jnp.ndarray, table: jnp.ndarray,
+                     indexer_params, x: jnp.ndarray, idx_kcache: jnp.ndarray,
+                     prev_topk: jnp.ndarray, lengths: jnp.ndarray,
+                     *, k: int, scale: float, heads: int, dim: int,
+                     rope_base: float, selector: str = "auto",
+                     prev_valid: Optional[jnp.ndarray] = None,
+                     max_candidates: Optional[int] = None,
+                     gate_max_n: int = 200_000,
+                     min_n: int = 4096,
+                     swa_window: Optional[int] = None, rules=None,
+                     mesh=None) -> DSAOutput:
+    """Block-table-native DSA decode step: identical scoring/selection to
+    `dsa_decode` (bit-exact — `idx_kcache` is the logical indexer-K view,
+    the paper's irreducible O(N·d_i) read), but attention gathers its K
+    rows straight from the page pools. The K/V logical views are never
+    built; feedback indices stay logical, so GVR's temporal warm start is
+    untouched by the physical layout.
+    """
+    sel = dsa_select(indexer_params, x, idx_kcache, prev_topk, lengths,
+                     k=k, heads=heads, dim=dim, rope_base=rope_base,
+                     selector=selector, prev_valid=prev_valid,
+                     max_candidates=max_candidates, gate_max_n=gate_max_n,
+                     min_n=min_n, swa_window=swa_window, rules=rules,
+                     mesh=mesh)
+    out = dsa_sparse_attention_paged(q, k_pages, v_pages, table, sel.indices,
+                                     lengths, scale=scale, rules=rules)
     return DSAOutput(out, sel.indices, sel.secant_iters, sel.gvr_rows)

@@ -30,10 +30,11 @@ equivalent (same semantics as a vmapped lax.cond).
 Layout invariant (paged serving): every index this module consumes
 (`prev_idx`) or produces lives in *logical* token space — position within
 the request's own context, never a physical KV-page id. The paged decode
-path (`models.transformer.serve_step_paged`) gathers its page pool into a
-contiguous logical view *before* scoring, so the selector is completely
-layout-blind and the prev-Top-K feedback survives page-table remaps
-(copy-on-write, preemption, shared-prefix admission) bit-exactly.
+path (`models.transformer.serve_step_paged`) always scores over the
+logical indexer view (under the default block-table-native mode only the
+*attention gather* is physical — DESIGN.md §paged), so the selector is
+completely layout-blind and the prev-Top-K feedback survives page-table
+remaps (copy-on-write, preemption, shared-prefix admission) bit-exactly.
 """
 
 from __future__ import annotations

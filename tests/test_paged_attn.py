@@ -1,0 +1,276 @@
+"""Block-table-native (fused) paged sparse attention: kernel-vs-oracle
+sweeps, the unmapped(-1)-page regression, a property test that the fused
+serve step is bit-identical to the gather-then-attend oracle over random
+page sizes / table permutations / warm-cold rows / ragged lengths, and the
+engine-level fused==gather pin (tokens, logits, method log, GVR rate)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from _hypothesis_compat import given, settings, st
+from repro.configs.registry import get_config
+from repro.kernels import paged_indexer_topk, paged_sparse_decode_attn
+from repro.kernels.ref import (indexer_scores_ref, paged_attn_ref,
+                               paged_gather_ref, sparse_decode_attn_ref,
+                               topk_ref)
+from repro.models.api import build_model
+from repro.serve import DecodeEngine, Request
+from repro.sparse.dsa import dsa_sparse_attention_paged
+
+RNG = np.random.default_rng(11)
+NEG = -3.4028235e38
+
+
+@pytest.fixture(scope="module")
+def model_and_params():
+    cfg = get_config("llama3.2-1b", smoke=True)
+    model = build_model(cfg)
+    params = model.init_params(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+# ---------------- kernel vs oracle ----------------------------------------
+
+@pytest.mark.parametrize("kvh,h", [(2, 8), (4, 4)])
+@pytest.mark.parametrize("page_size", [4, 8])
+def test_paged_attn_kernel_vs_ref(page_size, kvh, h):
+    """Fused table-translating attention kernel == pure-jnp oracle, with
+    -1-padded Top-K entries AND unmapped (-1) table entries in play."""
+    p, b, mp, d, k = 9, 2, 5, 16, 12
+    n = mp * page_size
+    kp = jnp.asarray(RNG.normal(size=(p, page_size, kvh, d)), jnp.float32)
+    vp = jnp.asarray(RNG.normal(size=(p, page_size, kvh, d)), jnp.float32)
+    table = RNG.integers(0, p, size=(b, mp)).astype(np.int32)
+    table[0, 2] = -1                                   # unmapped hole
+    idx = np.stack([RNG.choice(n, k, replace=False) for _ in range(b)])
+    idx = idx.astype(np.int32)
+    idx[1, 7:] = -1                                    # padded entries
+    q = jnp.asarray(RNG.normal(size=(b, h, d)), jnp.float32)
+    out = paged_sparse_decode_attn(q, kp, vp, jnp.asarray(table),
+                                   jnp.asarray(idx))
+    ref = paged_attn_ref(q, kp, vp, jnp.asarray(table), jnp.asarray(idx))
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_paged_attn_kernel_matches_logical_gather():
+    """The fused kernel over (pool, table) equals the logical-view sparse
+    attention over the materialized gather — the bit-level contract the
+    serving layer's `paged_attn="fused"` mode relies on."""
+    p, page_size, b, mp, kvh, h, d, k = 7, 8, 2, 4, 2, 4, 16, 10
+    n = mp * page_size
+    kp = jnp.asarray(RNG.normal(size=(p, page_size, kvh, d)), jnp.float32)
+    vp = jnp.asarray(RNG.normal(size=(p, page_size, kvh, d)), jnp.float32)
+    table = np.stack([RNG.choice(p, mp, replace=False) for _ in range(b)])
+    table = table.astype(np.int32)
+    idx = np.stack([RNG.choice(n, k, replace=False) for _ in range(b)])
+    idx = idx.astype(np.int32)
+    q = jnp.asarray(RNG.normal(size=(b, h, d)), jnp.float32)
+    out = paged_sparse_decode_attn(q, kp, vp, jnp.asarray(table),
+                                   jnp.asarray(idx))
+    view_k = paged_gather_ref(kp.reshape(p, page_size, -1),
+                              jnp.asarray(table)).reshape(b, n, kvh, d)
+    view_v = paged_gather_ref(vp.reshape(p, page_size, -1),
+                              jnp.asarray(table)).reshape(b, n, kvh, d)
+    ref = sparse_decode_attn_ref(q, view_k, view_v, jnp.asarray(idx))
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("page_size", [4, 8])
+def test_paged_indexer_topk_vs_ref(page_size):
+    """Fused paged indexer+GVR == scoring the materialized logical view +
+    exact Top-K, under ragged lengths and an unmapped page. Emitted
+    indices are logical and the value multiset is exact."""
+    p, b, mp, h, d, k = 8, 2, 6, 4, 16, 8
+    n = mp * page_size
+    ip = jnp.asarray(RNG.normal(size=(p, page_size, d)), jnp.float32)
+    table = RNG.integers(0, p, size=(b, mp)).astype(np.int32)
+    table[1, mp - 1] = -1
+    q = jnp.asarray(RNG.normal(size=(b, h, d)), jnp.float32)
+    w = jnp.asarray(np.abs(RNG.normal(size=(h,))), jnp.float32)
+    prev = jnp.asarray(np.stack([RNG.choice(n, k, replace=False)
+                                 for _ in range(b)]), jnp.int32)
+    lengths = jnp.asarray([n, n - page_size - 2], jnp.int32)
+    v, i, stats = paged_indexer_topk(q, ip, w, jnp.asarray(table), prev, k,
+                                     lengths=lengths)
+    view = paged_gather_ref(ip, jnp.asarray(table)).reshape(b, n, d)
+    sref = indexer_scores_ref(q, view, w, lengths=lengths)
+    mapped = np.repeat(table >= 0, page_size, axis=1)
+    sref = jnp.where(jnp.asarray(mapped), sref, jnp.float32(NEG))
+    rv, _ = topk_ref(sref, k)
+    np.testing.assert_allclose(np.sort(np.asarray(v)), np.sort(np.asarray(rv)),
+                               rtol=1e-5, atol=1e-5)
+    ii = np.asarray(i)
+    assert (ii >= 0).all() and (ii < n).all()          # logical index space
+    gathered = np.take_along_axis(np.asarray(sref), ii, axis=-1)
+    np.testing.assert_allclose(np.sort(gathered), np.sort(np.asarray(rv)),
+                               rtol=1e-5, atol=1e-5)
+
+
+# ---------------- unmapped (-1) regression --------------------------------
+
+def test_unmapped_table_entries_never_contribute_logits():
+    """Poisoning the page that a clipped unmapped address WOULD read (page
+    0, ±inf/huge rows) must not change the output by a single bit, in both
+    the Pallas kernel and the XLA serving form — the -1 sentinel masks
+    before the softmax, it does not rely on the garbage being benign."""
+    p, page_size, b, mp, kvh, h, d, k = 5, 4, 1, 4, 2, 4, 8, 6
+    n = mp * page_size
+    kp = RNG.normal(size=(p, page_size, kvh, d)).astype(np.float32)
+    vp = RNG.normal(size=(p, page_size, kvh, d)).astype(np.float32)
+    table = np.array([[2, -1, 3, -1]], np.int32)       # holes at pages 1, 3
+    # half the Top-K entries land inside the unmapped logical pages
+    idx = np.array([[0, 5, 6, 9, 13, 15]], np.int32)
+    q = RNG.normal(size=(b, h, d)).astype(np.float32)
+    lengths = jnp.asarray([n], jnp.int32)
+
+    outs = {}
+    for poison in (1e30, -1e30):
+        kp2, vp2 = kp.copy(), vp.copy()
+        kp2[0] = poison                                # the clip target
+        vp2[0] = poison
+        outs[poison] = (
+            np.asarray(paged_sparse_decode_attn(
+                jnp.asarray(q), jnp.asarray(kp2), jnp.asarray(vp2),
+                jnp.asarray(table), jnp.asarray(idx))),
+            np.asarray(dsa_sparse_attention_paged(
+                jnp.asarray(q), jnp.asarray(kp2), jnp.asarray(vp2),
+                jnp.asarray(table), jnp.asarray(idx), lengths,
+                scale=d ** -0.5)),
+        )
+    for a, b_ in zip(outs[1e30], outs[-1e30]):
+        np.testing.assert_array_equal(a, b_)
+        assert np.isfinite(a).all()
+
+
+def test_unmapped_pages_never_selected_by_indexer():
+    """An unmapped page whose physical clip-target holds enormous scores
+    must still never be selected: its logical positions score the NEG
+    sentinel inside the fused kernel."""
+    p, page_size, b, mp, h, d, k = 4, 4, 1, 4, 2, 8, 6
+    n = mp * page_size
+    ip = RNG.normal(size=(p, page_size, d)).astype(np.float32)
+    ip[0] = 100.0                                      # huge clip-target rows
+    table = np.array([[1, -1, 2, -1]], np.int32)
+    q = np.abs(RNG.normal(size=(b, h, d))).astype(np.float32)
+    w = np.abs(RNG.normal(size=(h,))).astype(np.float32)
+    prev = np.array([[0, 1, 2, 3, 8, 9]], np.int32)
+    v, i, _ = paged_indexer_topk(jnp.asarray(q), jnp.asarray(ip),
+                                 jnp.asarray(w), jnp.asarray(table),
+                                 jnp.asarray(prev), k)
+    ii = np.asarray(i)[0]
+    mapped_logical = set(range(0, 4)) | set(range(8, 12))
+    assert set(ii.tolist()) <= mapped_logical, ii
+
+
+# ---------------- property: fused == gather (model level) -----------------
+
+_PROP = {}
+
+
+@pytest.fixture(scope="module", autouse=True)
+def _prop_ctx(model_and_params):
+    cfg, model, params = model_and_params
+    _PROP.update(
+        cfg=cfg, model=model, params=params,
+        fused=jax.jit(lambda p, s, t: model.serve_step_paged(
+            p, s, t, paged_attn="fused")),
+        gather=jax.jit(lambda p, s, t: model.serve_step_paged(
+            p, s, t, paged_attn="gather")),
+    )
+    yield
+
+
+def _random_paged_state(cfg, model, rng, *, page_size, batch, max_len):
+    """A mid-decode paged state with randomly permuted tables, ragged
+    lengths, warm/cold feedback rows, and fully poisoned page pools
+    (including unmapped pages — nothing may leak from them)."""
+    mp = max_len // page_size
+    num_pages = batch * mp
+    state = model.init_paged_decode_state(batch, max_len,
+                                          num_pages=num_pages,
+                                          page_size=page_size)
+    lengths = rng.integers(0, max_len - 1, size=batch)
+    perm = rng.permutation(num_pages)
+    table = np.full((batch, mp), -1, np.int32)
+    pos = 0
+    for s in range(batch):
+        # map exactly the pages covering [0, length] (the write position
+        # included) — the tail stays unmapped, as after a real admission
+        npages = (int(lengths[s]) + 1 + page_size - 1) // page_size
+        table[s, :npages] = perm[pos:pos + npages]
+        pos += npages
+    state["page_table"] = jnp.asarray(table)
+    state["length"] = jnp.asarray(lengths, jnp.int32)
+    for key in ("k_pages", "v_pages", "idx_k_pages"):
+        state[key] = jnp.asarray(
+            rng.normal(size=state[key].shape).astype(np.float32))
+    kk = state["prev_topk"].shape[-1]
+    l = state["prev_topk"].shape[0]
+    state["prev_topk"] = jnp.asarray(
+        rng.integers(0, max_len, size=(l, batch, kk)).astype(np.int32))
+    state["topk_valid"] = jnp.asarray(
+        rng.integers(0, 2, size=(l, batch)).astype(bool))   # warm/cold mix
+    tokens = jnp.asarray(rng.integers(0, cfg.vocab, (batch,)), jnp.int32)
+    return state, tokens
+
+
+@settings(max_examples=5, deadline=None)
+@given(data=st.data())
+def test_property_fused_bit_identical_to_gather(data):
+    """Random page sizes, table permutations, warm/cold rows and ragged
+    lengths: one fused step returns bit-identical logits AND bit-identical
+    new state (feedback buffer, telemetry, page pools) to the gather-then-
+    attend oracle step."""
+    cfg, model = _PROP["cfg"], _PROP["model"]
+    page_size = data.draw(st.sampled_from([4, 8, 16]), label="page_size")
+    seed = data.draw(st.integers(0, 10_000), label="seed")
+    rng = np.random.default_rng(seed)
+    state, tokens = _random_paged_state(cfg, model, rng, page_size=page_size,
+                                        batch=3, max_len=64)
+    lg_f, st_f = _PROP["fused"](_PROP["params"], state, tokens)
+    lg_g, st_g = _PROP["gather"](_PROP["params"], state, tokens)
+    np.testing.assert_array_equal(np.asarray(lg_f), np.asarray(lg_g))
+    assert set(st_f) == set(st_g)
+    for key in st_f:
+        np.testing.assert_array_equal(np.asarray(st_f[key]),
+                                      np.asarray(st_g[key]), err_msg=key)
+
+
+# ---------------- engine level: fused == gather ---------------------------
+
+def test_engine_fused_bit_identical_to_gather(model_and_params):
+    """Same ragged staggered trace through both paged_attn modes: tokens,
+    full logits, per-tick method log and the GVR hit rate all match — the
+    fused path changes the traffic, never the bits."""
+    cfg, model, params = model_and_params
+    specs = [(6, 5, 0), (11, 4, 2), (9, 5, 4)]
+
+    def mk(seed=5):
+        rng = np.random.default_rng(seed)
+        return [Request(uid=i, prompt=rng.integers(0, cfg.vocab, (p,)),
+                        max_new_tokens=m, arrival=a)
+                for i, (p, m, a) in enumerate(specs)]
+
+    runs = {}
+    for mode in ("gather", "fused"):
+        eng = DecodeEngine(model, params, num_slots=2, max_len=64,
+                           prefill_chunk=4, kv_layout="paged", page_size=8,
+                           record_logits=True, paged_attn=mode)
+        reqs = mk()
+        rep = eng.run(reqs, max_ticks=800)
+        assert rep.completed == len(specs)
+        runs[mode] = (reqs, rep, eng.method_log)
+
+    for a, b in zip(runs["gather"][0], runs["fused"][0]):
+        assert a.generated == b.generated, a.uid
+        assert len(a.logits_log) == len(b.logits_log)
+        for la, lb in zip(a.logits_log, b.logits_log):
+            np.testing.assert_array_equal(la, lb)
+    assert runs["gather"][2] == runs["fused"][2]
+    assert (runs["gather"][1].decode_method_counts
+            == runs["fused"][1].decode_method_counts)
+    assert runs["gather"][1].gvr_hit_rate == runs["fused"][1].gvr_hit_rate
