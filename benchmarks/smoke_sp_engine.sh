@@ -1,0 +1,24 @@
+#!/usr/bin/env sh
+# Tier-2 smoke: run the sequence-sharded serving benchmark on CPU.
+#
+#   ./benchmarks/smoke_sp_engine.sh
+#
+# Exercises the DecodeEngine over the SP-GVR sequence-sharded path end to
+# end (forced multi-device CPU mesh in a subprocess): per-tick collective
+# bytes asserted O(1) in context length vs the O(N) score-row all-gather
+# baseline, S× context capacity at fixed per-device KV budget, and engine
+# tokens/s with the built-in acceptance that the sharded engine generates
+# the single-device fused engine's exact tokens. Leaves BENCH_sp_engine.json
+# in the repo root. Exits non-zero if the section's acceptance asserts fail
+# or the section errors.
+set -eu
+cd "$(dirname "$0")/.."
+export JAX_PLATFORMS="${JAX_PLATFORMS:-cpu}"
+PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" python -m benchmarks.run sp_engine | tee /tmp/sp_engine_bench.out
+# benchmarks/run.py swallows section exceptions into */ERROR rows — fail on them
+if grep -q "ERROR" /tmp/sp_engine_bench.out; then
+    echo "sp_engine benchmark reported an error" >&2
+    exit 1
+fi
+test -f BENCH_sp_engine.json
+echo "sp_engine smoke OK"

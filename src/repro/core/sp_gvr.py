@@ -273,6 +273,29 @@ def _pax_max(v, axis_name):
     return jax.lax.pmax(v, axis_name)
 
 
+def sp_canonical_topk(local_indices: jnp.ndarray, k: int, n: int,
+                      axis_name: str) -> jnp.ndarray:
+    """Assemble the replicated global Top-K buffer from per-shard results,
+    in the single-device canonical order (ascending global index — the
+    order `core.gvr.extract_topk`'s prefix-sum compaction emits).
+
+    `local_indices` is `SPGVRResult.local_indices` ((B, K), -1-padded past
+    the shard's own count). Cost: one K-int all-gather (K·D·4B — O(1) in
+    context length). Because SP-GVR's shard-ordered tie quota implements
+    the same lowest-global-index tie policy as the single-device selector
+    paths, the returned (B, K) buffer is *bit-identical* to what
+    `sparse.selector.select_topk` would emit for the unsharded score row —
+    which is what lets a sequence-sharded serving step carry the same
+    prev-Top-K feedback (and downstream attention bits) as the fused
+    single-device step.
+    """
+    all_idx = jax.lax.all_gather(local_indices, axis_name, axis=1,
+                                 tiled=True)                   # (B, D*K)
+    # -1 pads sort past every valid index (valid < n); exactly K survive
+    keyed = jnp.where(all_idx < 0, jnp.int32(n), all_idx)
+    return jnp.sort(keyed, axis=-1)[:, :k].astype(jnp.int32)
+
+
 def sp_gvr_topk(scores: jnp.ndarray, prev_idx: jnp.ndarray, k: int, mesh,
                 axis_name: str = "data", **kw):
     """Convenience wrapper: shard scores over `axis_name`, run SP-GVR, and

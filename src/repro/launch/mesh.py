@@ -28,3 +28,17 @@ def make_mesh(shape, axes):
     """Arbitrary mesh (tests / small runs)."""
     return jax.make_mesh(tuple(shape), tuple(axes),
                          **_axis_type_kwargs(len(axes)))
+
+
+def make_seq_mesh(seq_shards: int):
+    """1-D sequence mesh for the sequence-sharded decode engine
+    (`DecodeEngine(kv_layout="paged", seq_shards=S)`): each device owns the
+    KV pages of one contiguous span of the logical token range, and
+    `serve_step_sp_paged` shard_maps over the "seq" axis."""
+    if seq_shards > len(jax.devices()):
+        raise ValueError(
+            f"seq_shards={seq_shards} exceeds the {len(jax.devices())} "
+            f"available device(s) — on CPU hosts force more with "
+            f"XLA_FLAGS=--xla_force_host_platform_device_count=N before "
+            f"the first jax call")
+    return jax.make_mesh((seq_shards,), ("seq",), **_axis_type_kwargs(1))

@@ -107,6 +107,42 @@ class Model:
                   min_write_pos=min_write_pos, paged_attn=paged_attn,
                   mesh=mesh, rules=rules)
 
+    # ---- sequence-sharded paged decode (SP-GVR serving path) ------------
+    def init_sp_paged_decode_state(self, batch, max_len, *,
+                                   num_pages_per_shard, page_size,
+                                   seq_shards, dtype=None):
+        """Sequence-sharded paged layout: per-shard page pools (leading
+        shard axis) + shard-local block tables. Raises for families
+        without the sharded decode path."""
+        fn = getattr(self.mod, "init_sp_paged_decode_state", None)
+        if fn is None:
+            raise NotImplementedError(
+                f"family {self.cfg.family!r} has no sequence-sharded "
+                f"paged decode state")
+        return fn(self.cfg, batch, max_len,
+                  num_pages_per_shard=num_pages_per_shard,
+                  page_size=page_size, seq_shards=seq_shards, dtype=dtype)
+
+    def sp_paged_state_batch_axes(self) -> Optional[Dict[str, int]]:
+        """Slot-axis map of the sequence-sharded paged decode state
+        (sharded page pools absent — pool-global per shard), or None."""
+        fn = getattr(self.mod, "sp_paged_state_batch_axes", None)
+        return fn(self.cfg) if fn is not None else None
+
+    def serve_step_sp_paged(self, params, state, tokens, *, mesh,
+                            min_write_pos=None, rules=None):
+        """One sequence-sharded paged decode step (shard_map over the
+        mesh's "seq" axis; SP-GVR selection + O(K)-psum paged attention).
+        Bit-identical to `serve_step_paged(paged_attn="fused")` — see
+        transformer.serve_step_sp_paged."""
+        fn = getattr(self.mod, "serve_step_sp_paged", None)
+        if fn is None:
+            raise NotImplementedError(
+                f"family {self.cfg.family!r} has no sequence-sharded "
+                f"paged serve_step")
+        return fn(params, state, tokens, self.cfg, mesh=mesh,
+                  min_write_pos=min_write_pos, rules=rules)
+
     def serve_step(self, params, state, tokens, *, mesh=None, rules=None,
                    seq_sharded: bool = False):
         if self.cfg.family == "hybrid":

@@ -456,6 +456,221 @@ def serve_step(params, state, tokens, cfg: ModelConfig, *, mesh=None,
 
 
 # --------------------------------------------------------------------------
+# Sequence-sharded paged decode — SP-GVR serving path (DESIGN.md §sp-serving)
+# --------------------------------------------------------------------------
+#
+# For 500K-context slots no single device holds a slot's KV pages, so the
+# page pools shard over a 1-D sequence mesh: shard s owns the pages whose
+# LOGICAL token range falls in [s·N/S, (s+1)·N/S), each shard has its own
+# `num_pages_per_shard`-page pool (plus its own write-sink page), and the
+# replicated block table stores SHARD-LOCAL physical ids (the logical page
+# index determines the owner, so no shard field is needed). Everything the
+# GVR feedback loop touches — prev_topk, topk_valid, sel_gvr, lengths —
+# stays replicated in GLOBAL logical token space (sp_gvr_topk_local's
+# contract), so admission/eviction/preemption hooks and the warm/cold
+# dispatch are byte-for-byte the single-device ones. Selection runs through
+# SP-GVR's O(1)-collective schedule and attention assembles exactly the K
+# selected rows with one O(K) psum (sparse/sp_dsa.py), so a 512K-token slot
+# never materializes a global score row or logical KV view: per-device KV
+# residency is N/S and per-tick collective traffic is independent of N.
+
+
+def init_sp_paged_decode_state(cfg: ModelConfig, batch: int, max_len: int, *,
+                               num_pages_per_shard: int, page_size: int,
+                               seq_shards: int,
+                               dtype=None) -> Dict[str, jnp.ndarray]:
+    """Sequence-sharded variant of `init_paged_decode_state`.
+
+    Page pools gain a leading shard axis — (L, S, PL+1, page_size, ...) —
+    which `serve_step_sp_paged` shards over the mesh's "seq" axis; each
+    shard's extra final page is its own write sink. `max_len` must divide
+    into `seq_shards` page-aligned spans so logical-page ownership is
+    whole-page. The block table holds shard-local physical ids.
+    """
+    dtype = dtype or jnp.dtype(cfg.dtype)
+    if max_len % (page_size * seq_shards) != 0:
+        raise ValueError(
+            f"max_len ({max_len}) must be a multiple of page_size × "
+            f"seq_shards ({page_size}×{seq_shards}) — shard token spans "
+            f"must be page-aligned for whole-page ownership")
+    l, hd = cfg.n_layers, cfg.hd
+    mp = max_len // page_size
+    state = {
+        "k_pages": jnp.zeros((l, seq_shards, num_pages_per_shard + 1,
+                              page_size, cfg.n_kv_heads, hd), dtype),
+        "v_pages": jnp.zeros((l, seq_shards, num_pages_per_shard + 1,
+                              page_size, cfg.n_kv_heads, hd), dtype),
+        "page_table": jnp.full((batch, mp), -1, jnp.int32),
+        "length": jnp.zeros((batch,), jnp.int32),
+    }
+    if cfg.dsa.enabled:
+        from repro.core.temporal import seed_slot_idx
+        state["idx_k_pages"] = jnp.zeros(
+            (l, seq_shards, num_pages_per_shard + 1, page_size,
+             cfg.dsa.indexer_dim), dtype)
+        kk = min(cfg.dsa.k, max_len)
+        base = seed_slot_idx(kk, max_len)
+        state["prev_topk"] = jnp.broadcast_to(base[None, None], (l, batch, kk))
+        state["topk_valid"] = jnp.zeros((l, batch), bool)
+        state["sel_gvr"] = jnp.zeros((l, batch), bool)
+    return state
+
+
+def sp_paged_state_batch_axes(cfg: ModelConfig) -> Dict[str, int]:
+    """Slot-axis map of the sequence-sharded paged state — identical to the
+    single-device paged map (the sharded page pools are likewise pool-global
+    per shard and must pass through the engine's row merge unmerged)."""
+    return paged_state_batch_axes(cfg)
+
+
+def serve_step_sp_paged(params, state, tokens, cfg: ModelConfig, *, mesh,
+                        min_write_pos: Optional[jnp.ndarray] = None,
+                        seq_axis: str = "seq",
+                        rules: Optional[MeshRules] = None):
+    """One sequence-sharded paged decode step (inside a shard_map over the
+    mesh's `seq_axis`). tokens: (B,) int32. Returns (logits, state).
+
+    Per shard and per layer: the shard owning logical position `length`
+    scatters the new token's K/V/indexer-K rows into ITS page pool (every
+    other shard writes its own sink page — scatter shapes stay static and
+    replay masking via `min_write_pos` works exactly as in the single-
+    device paged step); each shard scores its local logical indexer view;
+    `sp_gvr_topk_local` selects the exact global Top-K with O(1)-sized
+    collectives; attention assembles exactly the K selected rows with one
+    O(K) psum and runs replicated (`sp_dsa_decode_paged_local`). The
+    result is bit-identical to `serve_step_paged(..., paged_attn="fused")`
+    over the same logical cache content — tokens, logits, feedback buffer
+    and telemetry alike — which `tests/test_sp_engine.py` pins.
+
+    Requires an active DSA gate (`cfg.dsa.enabled` and
+    `max_len > cfg.dsa.min_n`): sequence sharding exists for long contexts,
+    and the dense fallback attention has no sharded form here.
+    """
+    b = tokens.shape[0]
+    hd = cfg.hd
+    l, num_shards = state["k_pages"].shape[:2]
+    ppl = state["k_pages"].shape[2] - 1                  # pages per shard
+    page_size = state["k_pages"].shape[3]
+    mp = state["page_table"].shape[1]
+    n = mp * page_size                                   # global logical extent
+    if mp % num_shards != 0:
+        raise ValueError(f"logical pages ({mp}) must divide over "
+                         f"{num_shards} shards")
+    mp_local = mp // num_shards
+    n_local = mp_local * page_size
+    if not (cfg.dsa.enabled and n > cfg.dsa.min_n):
+        raise ValueError(
+            "serve_step_sp_paged requires the DSA gate open "
+            f"(dsa.enabled and max_len > dsa.min_n={cfg.dsa.min_n}): the "
+            "sequence-sharded path has no dense fallback attention")
+    if mesh.shape[seq_axis] != num_shards:
+        raise ValueError(
+            f"state carries {num_shards} shards but mesh axis "
+            f"{seq_axis!r} has {mesh.shape[seq_axis]} devices")
+    kk = state["prev_topk"].shape[-1]
+    mwp = (min_write_pos if min_write_pos is not None
+           else jnp.zeros((b,), jnp.int32))
+
+    from repro.sparse import sp_dsa as sp_dsa_mod
+
+    def body(params, state, tokens, mwp):
+        my = jax.lax.axis_index(seq_axis)
+        shard_offset = (my * n_local).astype(jnp.int32)
+        table = state["page_table"]                      # (B, MP) replicated
+        table_local = jax.lax.dynamic_slice_in_dim(
+            table, my * mp_local, mp_local, axis=1)      # shard-local slice
+        positions = state["length"]
+        new_len = state["length"] + 1
+        sink = ppl                                       # local sink page id
+
+        # this shard writes iff it owns the write position
+        owner = (positions >= shard_offset) & (positions < shard_offset + n_local)
+        rel = jnp.clip(positions - shard_offset, 0, n_local - 1)
+        phys = jnp.take_along_axis(table_local,
+                                   (rel // page_size)[:, None], axis=1)[:, 0]
+        writable = owner & (phys >= 0) & (positions >= mwp)
+        dest = jnp.where(writable, phys, sink)
+        off = positions % page_size                      # page-aligned spans
+        gather_local = jnp.clip(table_local, 0, sink)
+
+        x = params["embed"][tokens]
+
+        def layer(x, carry):
+            p = carry["p"]
+            kp, vp = carry["k_pages"], carry["v_pages"]
+            idx_kp = carry["idx_k_pages"]
+            prev_topk = carry["prev_topk"]
+            topk_valid = carry.get("topk_valid")
+            h = rms_norm(x, p["ln1"])
+            q, kn, vn = _project_qkv(p, h, b, positions, cfg, None)
+            kp = kp.at[dest, off].set(kn.astype(kp.dtype))
+            vp = vp.at[dest, off].set(vn.astype(vp.dtype))
+            ik = dsa_mod.indexer_k(p["indexer"], h, positions,
+                                   dim=cfg.dsa.indexer_dim,
+                                   rope_base=cfg.rope_base)
+            idx_kp = idx_kp.at[dest, off].set(ik.astype(idx_kp.dtype))
+            # shard-local logical indexer view: N/S × d_i per device — the
+            # irreducible indexer read, now split across the mesh
+            idx_kc = idx_kp[gather_local].reshape(b, n_local,
+                                                  cfg.dsa.indexer_dim)
+            res = sp_dsa_mod.sp_dsa_decode_paged_local(
+                q, kp, vp, table_local, p["indexer"], h, idx_kc,
+                prev_topk, topk_valid, new_len,
+                k=kk, scale=hd ** -0.5, heads=cfg.dsa.indexer_heads,
+                dim=cfg.dsa.indexer_dim, rope_base=cfg.rope_base,
+                shard_offset=shard_offset, page_size=page_size,
+                max_candidates=cfg.dsa.max_candidates,
+                swa_window=cfg.swa_window, seq_axis=seq_axis)
+            out = {"k_pages": kp, "v_pages": vp, "idx_k_pages": idx_kp,
+                   "p": p, "prev_topk": res.new_topk}
+            if topk_valid is not None:
+                out["topk_valid"] = jnp.ones_like(topk_valid)
+                out["sel_gvr"] = res.gvr_rows
+            attn = res.attn_out.reshape(b, cfg.n_heads * hd).astype(x.dtype)
+            x = x + attn @ p["wo"]
+            h = rms_norm(x, p["ln2"])
+            if cfg.moe.num_experts:
+                m = _mlp(p, h[:, None, :], cfg, None)[:, 0]
+            else:
+                m = _mlp(p, h, cfg, None)
+            x = x + m
+            return x, out
+
+        carry_in = {"p": params["layers"],
+                    "k_pages": state["k_pages"][:, 0],
+                    "v_pages": state["v_pages"][:, 0],
+                    "idx_k_pages": state["idx_k_pages"][:, 0],
+                    "prev_topk": state["prev_topk"]}
+        if "topk_valid" in state:
+            carry_in["topk_valid"] = state["topk_valid"]
+        x, outs = jax.lax.scan(layer, x, carry_in)
+
+        new_state = dict(state)
+        for key in ("k_pages", "v_pages", "idx_k_pages"):
+            new_state[key] = outs[key][:, None]          # restore shard axis
+        new_state["prev_topk"] = outs["prev_topk"]
+        if "topk_valid" in state:
+            new_state["topk_valid"] = outs["topk_valid"]
+            new_state["sel_gvr"] = outs["sel_gvr"]
+        new_state["length"] = new_len
+
+        x = rms_norm(x, params["final_norm"])
+        head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+        logits = (x @ head).astype(jnp.float32)
+        return logits, new_state
+
+    pool_spec = P(None, seq_axis)
+    st_spec = {key: (pool_spec if key in ("k_pages", "v_pages", "idx_k_pages")
+                     else P()) for key in state}
+    param_spec = jax.tree.map(lambda _: P(), params)
+    from repro.parallel.sharding import shard_map
+    fn = shard_map(body, mesh=mesh,
+                   in_specs=(param_spec, st_spec, P(), P()),
+                   out_specs=(P(), st_spec), check_vma=False)
+    return fn(params, state, tokens, mwp)
+
+
+# --------------------------------------------------------------------------
 # Paged decode (serve) path — pool-of-pages KV layout
 # --------------------------------------------------------------------------
 #

@@ -60,12 +60,19 @@ so the contiguous logical K/V views are never materialized and per-tick
 gathered KV traffic is O(K) rather than O(N). `paged_attn="gather"`
 keeps the materialize-then-attend oracle; both modes are pinned
 bit-identical (DESIGN.md §paged, tests/test_paged_attn.py).
+
+`seq_shards=S` (paged layout only) additionally shards the page pools —
+and the whole serving step — over a 1-D sequence mesh for contexts no
+single device can hold: per-device KV residency is max_len/S, selection
+runs SP-GVR's O(1)-collective schedule, and decode stays bit-identical
+to the single-device fused engine (DESIGN.md §sp-serving,
+tests/test_sp_engine.py).
 """
 
 from .engine import DecodeEngine, EngineReport, Request
 from .feedback_pool import FeedbackPool
 from .paged import (AdmitPlan, BlockPool, BlockTable, PagedKVManager,
-                    PoolExhausted, PrefixCache)
+                    PoolExhausted, PrefixCache, ShardedPagedKVManager)
 from .sampling import sample_token
 from .scheduler import (DECODE, DONE, PREFILL, QUEUED, FIFOScheduler,
                         LongestContextFirstScheduler, Scheduler,
@@ -75,7 +82,7 @@ __all__ = [
     "DecodeEngine", "EngineReport", "Request",
     "FeedbackPool",
     "AdmitPlan", "BlockPool", "BlockTable", "PagedKVManager",
-    "PoolExhausted", "PrefixCache", "sample_token",
+    "PoolExhausted", "PrefixCache", "ShardedPagedKVManager", "sample_token",
     "Scheduler", "FIFOScheduler", "LongestContextFirstScheduler",
     "make_scheduler", "QUEUED", "PREFILL", "DECODE", "DONE",
 ]

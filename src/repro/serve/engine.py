@@ -59,6 +59,18 @@ KV layouts (`kv_layout`):
   straight from the page pools, O(K) traffic per tick — while "gather"
   materializes the contiguous logical view first (the PR-2 oracle both
   modes are pinned bit-identical against; see DESIGN.md §paged).
+* "paged" + `seq_shards=S` — sequence-sharded serving (DESIGN.md
+  §sp-serving): the page pools partition over a 1-D sequence mesh
+  (device s owns the pages of logical span s; `num_pages` is PER SHARD —
+  the per-device KV budget), the step runs inside a shard_map routing
+  selection through SP-GVR's O(1)-collective schedule and attention
+  through the O(K)-psum paged assembly (`sparse/sp_dsa.py`), and the
+  host-side paging (`serve.paged.ShardedPagedKVManager`) resolves
+  admission/COW/preemption pressure against each page's OWNER shard.
+  Decode is bit-identical to the single-device fused engine — tokens,
+  method log, GVR hit rate, preemption schedule (tests/test_sp_engine.py)
+  — while per-device KV residency drops to max_len/S and per-tick
+  collective traffic is independent of context length.
 
 Bit-exactness: every per-slot computation in `serve_step` is row-parallel
 (attention, norms, projections act per batch row), so a request decoded in
@@ -71,7 +83,7 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, List, Optional, Tuple, Union
 
 import jax
 import jax.numpy as jnp
@@ -81,7 +93,7 @@ from repro.models.transformer import PAGED_NEVER_WRITE
 
 from . import sampling
 from .feedback_pool import FeedbackPool
-from .paged import PagedKVManager, PoolExhausted
+from .paged import PagedKVManager, PoolExhausted, ShardedPagedKVManager
 from .scheduler import DECODE, DONE, PREFILL, QUEUED, Scheduler, make_scheduler
 
 
@@ -139,9 +151,11 @@ class EngineReport:
     * `preemptions` — slots evicted back to the queue under page pressure.
     * `prefix_hit_tokens` — prompt tokens served from the prefix cache
       instead of being streamed (paged layout only).
-    * `peak_page_utilization` — max pages_in_use / num_pages over the
-      window's ticks, re-baselined to the live state at `run()` entry
-      (paged layout only; 0.0 for dense).
+    * `peak_page_utilization` — max utilization of the MOST-PRESSURED
+      pool over the window's ticks (the single pool, or the hottest
+      shard's pool under `seq_shards` — an aggregate ratio could read
+      half-empty while one shard saturates and preempts), re-baselined to
+      the live state at `run()` entry (paged layout only; 0.0 for dense).
     """
     ticks: int
     wall_s: float
@@ -184,7 +198,7 @@ class DecodeEngine:
                  eos_id: Optional[int] = None, record_logits: bool = False,
                  kv_layout: str = "dense", page_size: int = 16,
                  num_pages: Optional[int] = None, prefix_caching: bool = True,
-                 paged_attn: str = "fused"):
+                 paged_attn: str = "fused", seq_shards: int = 1, mesh=None):
         if kv_layout not in ("dense", "paged"):
             raise ValueError(f"unknown kv_layout {kv_layout!r}")
         if paged_attn not in ("fused", "gather"):
@@ -200,11 +214,68 @@ class DecodeEngine:
         self.record_logits = record_logits
         self.kv_layout = kv_layout
         self.paged_attn = paged_attn
+        self.seq_shards = int(seq_shards)
+        self.mesh = mesh
         self.scheduler: Scheduler = (scheduler if isinstance(scheduler, Scheduler)
                                      else make_scheduler(scheduler))
         self.pool = FeedbackPool(model, self.num_slots)
 
-        if kv_layout == "paged":
+        if self.seq_shards > 1:
+            # sequence-sharded serving (DESIGN.md §sp-serving): the paged
+            # pool partitions over a 1-D sequence mesh and serve_step runs
+            # the SP-GVR path inside a shard_map
+            if kv_layout != "paged":
+                raise ValueError("seq_shards > 1 requires kv_layout='paged' "
+                                 "(the dense layout has no sharded pool)")
+            if paged_attn != "fused":
+                raise ValueError(
+                    "seq_shards > 1 requires paged_attn='fused': the "
+                    "sharded step is block-table-native per shard and "
+                    "never materializes a logical view to 'gather' from")
+            cfg = model.cfg
+            if not (cfg.dsa.enabled and self.max_len > cfg.dsa.min_n):
+                raise ValueError(
+                    "seq_shards > 1 requires the DSA gate open "
+                    f"(dsa.enabled and max_len > dsa.min_n="
+                    f"{cfg.dsa.min_n}): the sequence-sharded step has no "
+                    "dense fallback attention")
+            if self.max_len % (int(page_size) * self.seq_shards) != 0:
+                raise ValueError(
+                    f"max_len ({self.max_len}) must be a multiple of "
+                    f"page_size × seq_shards ({page_size}×{self.seq_shards})"
+                    f" — shard token spans must be page-aligned")
+            if self.mesh is None:
+                from repro.launch.mesh import make_seq_mesh
+                self.mesh = make_seq_mesh(self.seq_shards)
+            if ("seq" not in self.mesh.axis_names
+                    or self.mesh.shape["seq"] != self.seq_shards):
+                raise ValueError(
+                    f"mesh must carry a 'seq' axis of extent "
+                    f"{self.seq_shards}, got {dict(self.mesh.shape)}")
+            axes = model.sp_paged_state_batch_axes()
+            if axes is None:
+                raise ValueError(f"model family {model.cfg.family!r} does "
+                                 f"not expose a sequence-sharded paged "
+                                 f"decode state")
+            self._axes = axes
+            span_pages = self.max_len // int(page_size) // self.seq_shards
+            # `num_pages` is PER SHARD here: it is the per-device KV budget
+            # the sharded deployment actually provisions
+            per_shard = (int(num_pages) if num_pages is not None
+                         else self.num_slots * span_pages)
+            self.num_pages = per_shard * self.seq_shards
+            # duck-typed manager surface shared by both paged layouts —
+            # engine code must stay on the manager-level accessors
+            # (never `.pool`, which the sharded manager does not have)
+            self.kv: Optional[Union[PagedKVManager, ShardedPagedKVManager]] \
+                = ShardedPagedKVManager(
+                num_slots=self.num_slots, max_len=self.max_len,
+                page_size=int(page_size), num_pages_per_shard=per_shard,
+                seq_shards=self.seq_shards, prefix_caching=prefix_caching)
+            self.state = model.init_sp_paged_decode_state(
+                self.num_slots, self.max_len, num_pages_per_shard=per_shard,
+                page_size=int(page_size), seq_shards=self.seq_shards)
+        elif kv_layout == "paged":
             axes = model.paged_state_batch_axes()
             if axes is None:
                 raise ValueError(f"model family {model.cfg.family!r} does "
@@ -218,7 +289,7 @@ class DecodeEngine:
                     f"must match the dense cache shape exactly")
             self.num_pages = (int(num_pages) if num_pages is not None
                               else self.num_slots * pages_per_slot)
-            self.kv: Optional[PagedKVManager] = PagedKVManager(
+            self.kv = PagedKVManager(
                 num_slots=self.num_slots, max_len=self.max_len,
                 page_size=int(page_size), num_pages=self.num_pages,
                 prefix_caching=prefix_caching)
@@ -241,6 +312,7 @@ class DecodeEngine:
         self.preemptions = 0
         self.peak_occupancy = 0
         self.peak_pages_in_use = 0
+        self.peak_pool_util = 0.0
         self.completed: List[Request] = []
         # per-request: [(tick, phase, method), ...] — which selector path
         # served the request on each tick it was live
@@ -266,6 +338,10 @@ class DecodeEngine:
 
     def _serve_step(self, params, state, tokens, min_write_pos=None):
         """Layout dispatch: one model step over the given (sub-)pool."""
+        if self.seq_shards > 1:
+            return self.model.serve_step_sp_paged(
+                params, state, tokens, min_write_pos=min_write_pos,
+                mesh=self.mesh)
         if self.kv is not None:
             return self.model.serve_step_paged(params, state, tokens,
                                                min_write_pos=min_write_pos,
@@ -349,13 +425,15 @@ class DecodeEngine:
                 f"max_new ({request.max_new_tokens}) exceeds max_len "
                 f"({self.max_len})")
         if self.kv is not None:
-            ps = self.kv.page_size
-            worst = -(-(len(request.prompt) + request.max_new_tokens) // ps)
-            if worst > self.kv.pool.num_pages:
+            total = len(request.prompt) + request.max_new_tokens
+            # manager-level check: the sharded layout must bound each
+            # SHARD's span demand by that shard's own pool, not the
+            # aggregate (a global-pool check would admit requests that can
+            # never map their pages — see ShardedPagedKVManager)
+            if not self.kv.can_ever_hold(total):
                 raise ValueError(
-                    f"request {request.uid}: needs up to {worst} pages but "
-                    f"the pool holds {self.kv.pool.num_pages} — it could "
-                    f"never admit")
+                    f"request {request.uid}: "
+                    f"{self.kv.sizing_error(total)} — it could never admit")
         self.method_log.setdefault(request.uid, [])
         self.scheduler.submit(request)
 
@@ -382,12 +460,22 @@ class DecodeEngine:
             self.state["page_table"] = jnp.asarray(self.kv.table_array())
             self.kv.dirty = False
 
-    def _copy_page(self, src: int, dst: int) -> None:
-        """Device-side page copy backing a copy-on-write remap."""
+    def _copy_page(self, cow) -> None:
+        """Device-side page copy backing a copy-on-write remap. The
+        descriptor is `(src, dst)` for the single-pool layout and
+        `(shard, src, dst)` for the sequence-sharded one (page ids are
+        shard-local there — copying across the global page axis would hit
+        the wrong shard's pool)."""
         for key in ("k_pages", "v_pages", "idx_k_pages"):
             if key in self.state:
                 arr = self.state[key]
-                self.state[key] = arr.at[:, dst].set(arr[:, src])
+                if self.seq_shards > 1:
+                    shard, src, dst = cow
+                    self.state[key] = arr.at[:, shard, dst].set(
+                        arr[:, shard, src])
+                else:
+                    src, dst = cow
+                    self.state[key] = arr.at[:, dst].set(arr[:, src])
 
     def _preempt_victim(self, exclude: Optional[int] = None) -> Optional[int]:
         """Lowest-priority victim under page pressure. PREFILL slots first
@@ -450,16 +538,19 @@ class DecodeEngine:
                 self.kv.ensure_mapped(slot, pos)
                 cow = self.kv.ensure_writable(slot, pos)
                 if cow is not None:
-                    self._copy_page(*cow)
+                    self._copy_page(cow)
                 return
-            except PoolExhausted:
+            except PoolExhausted as exc:
                 victim = self._preempt_victim(exclude=slot)
                 if victim is None:
+                    # the original message names the binding pool (the
+                    # sharded manager's says WHICH shard) — the aggregate
+                    # page count would misstate a per-shard squeeze
                     raise RuntimeError(
-                        f"page pool exhausted ({self.kv.pool.num_pages} pages"
-                        f") with nothing left to preempt: slot {slot} alone "
-                        f"needs more pages than the pool holds — increase "
-                        f"num_pages") from None
+                        f"page pool exhausted ({exc}) with nothing left "
+                        f"to preempt: slot {slot} alone needs more pages "
+                        f"than the pool holds — increase num_pages") \
+                        from None
                 self._preempt(victim)
 
     def _admit(self) -> None:
@@ -596,7 +687,9 @@ class DecodeEngine:
         self._decode_tick()
         if self.kv is not None:
             self.peak_pages_in_use = max(self.peak_pages_in_use,
-                                         self.kv.pool.pages_in_use)
+                                         self.kv.pages_in_use)
+            self.peak_pool_util = max(self.peak_pool_util,
+                                      self.kv.hot_pool_utilization)
         self.tick_count += 1
 
     def idle(self) -> bool:
@@ -613,8 +706,10 @@ class DecodeEngine:
         # re-baseline them to the engine's current live state (an engine
         # reused across runs would otherwise report the old window's peak)
         self.peak_occupancy = sum(r is not None for r in self.slots)
-        self.peak_pages_in_use = (self.kv.pool.pages_in_use
+        self.peak_pages_in_use = (self.kv.pages_in_use
                                   if self.kv is not None else 0)
+        self.peak_pool_util = (self.kv.hot_pool_utilization
+                               if self.kv is not None else 0.0)
         start_tick = self.tick_count
         start_decoded = self.decoded_tokens
         start_prefill = self.prefill_tokens
@@ -644,6 +739,5 @@ class DecodeEngine:
             preemptions=self.preemptions - start_preempt,
             prefix_hit_tokens=(self.kv.skipped_tokens - start_skipped
                                if self.kv is not None else 0),
-            peak_page_utilization=(self.peak_pages_in_use
-                                   / self.kv.pool.num_pages
+            peak_page_utilization=(self.peak_pool_util
                                    if self.kv is not None else 0.0))

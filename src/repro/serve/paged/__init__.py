@@ -55,8 +55,9 @@ from .block_pool import BlockPool, PoolExhausted
 from .block_table import BlockTable
 from .manager import AdmitPlan, PagedKVManager
 from .prefix_cache import PrefixCache, chain_hashes
+from .sharded import ShardedPagedKVManager
 
 __all__ = [
     "AdmitPlan", "BlockPool", "BlockTable", "PagedKVManager",
-    "PoolExhausted", "PrefixCache", "chain_hashes",
+    "PoolExhausted", "PrefixCache", "ShardedPagedKVManager", "chain_hashes",
 ]

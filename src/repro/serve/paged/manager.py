@@ -60,11 +60,13 @@ class PagedKVManager:
                 return self.pool.alloc()
             raise
 
-    def _free_capacity(self) -> int:
-        """Pages obtainable without preemption: free + cache-reclaimable."""
+    def _free_capacity(self, exclude=()) -> int:
+        """Pages obtainable without preemption: free + cache-reclaimable.
+        `exclude` drops pages the caller plans to acquire as shared — they
+        cannot double as reclaim fodder in the same plan."""
         cap = self.pool.num_free
         if self.prefix is not None:
-            cap += self.prefix.reclaimable(self.pool)
+            cap += self.prefix.reclaimable(self.pool, exclude)
         return cap
 
     # ---- admission ------------------------------------------------------
@@ -82,9 +84,15 @@ class PagedKVManager:
                  if self.prefix is not None else [])
         n_prompt_pages = -(-plen // self.page_size)
         # side-effect-free capacity check first: a request that retries
-        # every tick under page pressure must not touch LRU order or stats
-        hits = self.prefix.probe(chain) if self.prefix is not None else 0
-        if self._free_capacity() < n_prompt_pages - hits:
+        # every tick under page pressure must not touch LRU order or stats.
+        # The hit pages are excluded from the reclaimable budget — they are
+        # acquired, not reclaimed, so counting them would let a doomed
+        # admission pass this check and reach the match/rollback path (with
+        # its telemetry/LRU side effects) every tick it stays queued
+        hit_pages = (self.prefix.probe_pages(chain)
+                     if self.prefix is not None else [])
+        if self._free_capacity(exclude=hit_pages) < \
+                n_prompt_pages - len(hit_pages):
             return None
         shared = (self.prefix.match(self.pool, chain)
                   if self.prefix is not None else [])
@@ -163,7 +171,44 @@ class PagedKVManager:
             return 0
         return self.prefix.reclaim(self.pool, n)
 
+    def can_ever_hold(self, num_tokens: int) -> bool:
+        """Could a request spanning `num_tokens` ever be admitted with the
+        pool otherwise empty? (The engine's submit-time sizing check —
+        layout-polymorphic with `ShardedPagedKVManager.can_ever_hold`,
+        whose accounting is per shard.)"""
+        return -(-int(num_tokens) // self.page_size) <= self.pool.num_pages
+
+    def sizing_error(self, num_tokens: int) -> str:
+        """Human-readable reason `can_ever_hold` failed (layout-aware
+        counterpart of `ShardedPagedKVManager.sizing_error`)."""
+        worst = -(-int(num_tokens) // self.page_size)
+        return (f"needs up to {worst} pages but the pool holds "
+                f"{self.pool.num_pages}")
+
     # ---- device-table sync + telemetry ----------------------------------
+
+    @property
+    def num_pages(self) -> int:
+        """Pool capacity. Engine code must use these manager-level
+        accessors, never reach into `.pool` — the sequence-sharded manager
+        has S pools, and any accounting that assumes one global pool
+        under-counts there (regression-tested in tests/test_paged.py)."""
+        return self.pool.num_pages
+
+    @property
+    def pages_in_use(self) -> int:
+        return self.pool.pages_in_use
+
+    @property
+    def num_free(self) -> int:
+        return self.pool.num_free
+
+    @property
+    def hot_pool_utilization(self) -> float:
+        """Utilization of the most-pressured pool — trivially THE pool
+        here; the sharded manager reports its max across shards so
+        telemetry points at the pool that actually binds."""
+        return self.pool.utilization
 
     def table_array(self) -> np.ndarray:
         """(num_slots, pages_per_slot) int32 for the jitted step."""

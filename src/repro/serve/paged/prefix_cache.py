@@ -69,13 +69,22 @@ class PrefixCache:
         size its page demand; only a *successful* admission then `match`es
         (a request retrying under page pressure must not keep entries warm
         or inflate the hit counters every tick it stays queued)."""
-        hits = 0
+        return len(self.probe_pages(chain))
+
+    def probe_pages(self, chain: List[Tuple[bytes, bytes]]) -> List[int]:
+        """The matchable chain prefix's pages, side-effect-free (`probe`
+        with identities). Admission capacity planning needs the pages
+        themselves: a hit page is *acquired*, not reclaimed, so it must be
+        excluded from the reclaimable count the plan leans on — otherwise
+        a doomed admission passes the pre-check, `match`es, and rolls back
+        with its telemetry/LRU side effects intact, every retry tick."""
+        pages: List[int] = []
         for key, tb in chain:
             ent = self._entries.get(key)
             if ent is None or ent[1] != tb:
                 break
-            hits += 1
-        return hits
+            pages.append(ent[0])
+        return pages
 
     def match(self, pool, chain: List[Tuple[bytes, bytes]]) -> List[int]:
         """Longest chain of cached pages matching the prompt's full pages,
@@ -104,10 +113,14 @@ class PrefixCache:
         self.insertions += 1
         return True
 
-    def reclaimable(self, pool) -> int:
-        """Pages that `reclaim` could free right now (cache-only refs)."""
+    def reclaimable(self, pool, exclude=()) -> int:
+        """Pages that `reclaim` could free right now (cache-only refs).
+        `exclude` removes pages the caller intends to ACQUIRE from the
+        count — an admission plan must not budget a prefix-hit page as
+        both shared and reclaimable."""
+        skip = set(exclude)
         return sum(1 for page, _ in self._entries.values()
-                   if pool.refcount[page] == 1)
+                   if pool.refcount[page] == 1 and page not in skip)
 
     def reclaim(self, pool, n: int) -> int:
         """Drop up to `n` least-recently-matched entries whose pages free

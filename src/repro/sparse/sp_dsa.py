@@ -30,7 +30,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
-from repro.core.sp_gvr import sp_gvr_topk_local
+from repro.core.sp_gvr import sp_canonical_topk, sp_gvr_topk_local
 from repro.models.layers import apply_rotary
 
 NEG = -3.4028235e38
@@ -123,6 +123,124 @@ def sp_dsa_decode_local(q, kc, vc, ikc, h, idx_params, prev_topk, lengths,
     order = jnp.argsort(all_idx < 0, axis=-1, stable=True)  # valid first
     new_topk = jnp.take_along_axis(all_idx, order, axis=-1)[:, :k]
     return SPDSAResult(out, kc, vc, ikc, new_topk.astype(jnp.int32))
+
+
+class SPDSAPagedResult(NamedTuple):
+    attn_out: jnp.ndarray     # (B, H, HD) f32 — replicated across shards
+    new_topk: jnp.ndarray     # (B, K) int32 global logical idx (replicated,
+                              # canonical ascending order)
+    secant_iters: jnp.ndarray  # (B,) int32 — SP-GVR phase-2 iterations
+    gvr_rows: jnp.ndarray     # (B,) bool — rows served off the temporal prior
+
+
+def sp_dsa_decode_paged_local(q, k_pages, v_pages, table_local, idx_params, h,
+                              idx_view_local, prev_topk, prev_valid, lengths,
+                              *, k: int, scale: float, heads: int, dim: int,
+                              rope_base: float, shard_offset,
+                              page_size: int,
+                              max_candidates=None,
+                              swa_window=None,
+                              seq_axis: str = "seq") -> SPDSAPagedResult:
+    """Shard-local *paged* DSA decode stage (call inside shard_map) — the
+    sequence-sharded serving engine's per-layer selection + attention core.
+
+    Unlike `sp_dsa_decode_local` (contiguous sequence-sharded caches, flash
+    partial combine), this form addresses each shard's *local page pool*
+    through its slice of the block table and assembles the gathered Top-K
+    rows with a single O(K) psum, so the step is **bit-identical** to the
+    single-device block-table-native path (`sparse.dsa.dsa_decode_paged`):
+
+      1. indexer     — each shard scores its local logical view (Eq. 1;
+                       per-position math identical to `dsa.indexer_scores`).
+      2. SP-GVR      — `sp_gvr_topk_local`: exact distributed Top-K with
+                       scalar-sized collectives (core.sp_gvr schedule).
+      3. canonical   — per-shard winners all-gather (K·D ints) and sort
+                       into the ascending-index buffer the single-device
+                       selector emits (`sp_canonical_topk`).
+      4. paged gather— each shard pulls the selected rows IT OWNS straight
+                       from its local page pool (`table[idx // page_size]`,
+                       local ids); non-owned slots contribute exact zeros
+                       and one (B,K,KVH,HD) psum assembles the replicated
+                       gathered buffer — exactly one shard contributes per
+                       slot, so the values are bit-equal to a single-device
+                       pool gather, and the traffic is O(K), independent
+                       of context length.
+      5. attention   — replicated softmax over the assembled rows, the
+                       same reduction extents/order as
+                       `dsa.dsa_sparse_attention_paged` → identical bits.
+
+    Shapes (per shard): q (B, H, HD); k/v_pages (PL+1, page_size, KVH, HD)
+    local pool (last page = this shard's write sink); table_local
+    (B, MP_local) int32 LOCAL physical ids (-1 unmapped); idx_view_local
+    (B, N_local, dim) the shard's logical indexer view; prev_topk (B, K)
+    GLOBAL logical indices (replicated); prev_valid (B,) bool (replicated);
+    lengths (B,) global; shard_offset scalar — global position of this
+    shard's first token.
+
+    `gvr_rows` mirrors the single-device mixed dispatch telemetry: the
+    rows with genuine previous-step feedback are the rows the temporal
+    prior actually served (SP-GVR is chosen explicitly by long-context
+    configs — DESIGN.md §2 — so there is no N-gate here; the engine-level
+    bit-identity pin runs below `gate_max_n` where the single-device auto
+    gate resolves to the same mixed dispatch).
+    """
+    b, hl, hd = q.shape
+    kvh = k_pages.shape[2]
+    g = hl // kvh
+    n_local = idx_view_local.shape[1]
+    sink = k_pages.shape[0] - 1
+
+    # -- 1. shard-local indexer scores over the local logical view ------
+    # per-position math mirrors dsa.indexer_scores bit-for-bit (contraction
+    # extents are per-position, so the shard slice changes nothing)
+    positions = lengths - 1
+    qi = (h @ idx_params["wq"]).reshape(b, 1, heads, dim)
+    qi = apply_rotary(qi, positions[:, None], kind="rope", base=rope_base)[:, 0]
+    s = jax.nn.relu(jnp.einsum("bhd,bnd->bhn", qi.astype(idx_view_local.dtype),
+                               idx_view_local,
+                               preferred_element_type=jnp.float32))
+    scores = jnp.einsum("h,bhn->bn", idx_params["w"].astype(jnp.float32), s)
+    gpos = jnp.arange(n_local, dtype=jnp.int32)[None, :] + shard_offset
+    scores = jnp.where(gpos < lengths[:, None], scores, NEG)
+    if swa_window is not None:
+        in_win = gpos > (lengths[:, None] - 1 - swa_window)
+        scores = jnp.where(in_win, scores, NEG)
+
+    # -- 2./3. SP-GVR exact distributed Top-K → canonical global buffer --
+    from repro.parallel.sharding import axis_size
+    d = axis_size(seq_axis)
+    n = n_local * d
+    sel = sp_gvr_topk_local(scores, prev_topk, k, seq_axis,
+                            max_candidates=max_candidates)
+    topk = sp_canonical_topk(sel.local_indices, k, n, seq_axis)   # (B, K)
+
+    # -- 4. owned-rows paged gather + one O(K) psum assembly -------------
+    rel = topk - shard_offset
+    owned = (rel >= 0) & (rel < n_local)
+    rel_c = jnp.clip(rel, 0, n_local - 1)
+    phys = jnp.take_along_axis(table_local, rel_c // page_size, axis=1)
+    mapped_loc = owned & (phys >= 0)
+    flat = jnp.clip(phys, 0, sink) * page_size + rel_c % page_size  # (B, K)
+    kg = k_pages.reshape((sink + 1) * page_size, kvh, hd)[flat]
+    vg = v_pages.reshape((sink + 1) * page_size, kvh, hd)[flat]
+    hit = mapped_loc[:, :, None, None]
+    kg = jax.lax.psum(jnp.where(hit, kg, jnp.zeros((), kg.dtype)), seq_axis)
+    vg = jax.lax.psum(jnp.where(hit, vg, jnp.zeros((), vg.dtype)), seq_axis)
+    mapped = jax.lax.psum(mapped_loc.astype(jnp.int32), seq_axis) > 0
+
+    # -- 5. replicated attention over the assembled Top-K rows -----------
+    # mirrors dsa.dsa_sparse_attention_paged: same einsums, same mask
+    logits = jnp.einsum("bkgd,bskd->bkgs", q.reshape(b, kvh, g, hd), kg,
+                        preferred_element_type=jnp.float32) * scale
+    valid = (topk >= 0) & (topk < lengths[:, None]) & mapped
+    logits = jnp.where(valid[:, None, None, :], logits, NEG)
+    pr = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bkgs,bskd->bkgd", pr.astype(vg.dtype), vg,
+                     preferred_element_type=jnp.float32)
+    gvr_rows = (prev_valid.astype(bool) if prev_valid is not None
+                else jnp.zeros((b,), bool))
+    return SPDSAPagedResult(out.reshape(b, hl, hd), topk,
+                            sel.secant_iters, gvr_rows)
 
 
 def make_sp_dsa(mesh, *, k: int, scale: float, heads: int, dim: int,

@@ -1,0 +1,32 @@
+"""Forced multi-device CPU mesh probing, shared by the `mesh`-marked tests.
+
+Multi-device CPU meshes require `--xla_force_host_platform_device_count`
+in XLA_FLAGS before the first jax call, so mesh tests run their payload in
+a subprocess. Capability is probed with a TRIVIAL separate subprocess:
+skipping on the payload script's own stderr would let a product regression
+whose message mentions the device-forcing flag masquerade as an incapable
+runner.
+"""
+
+import os
+import subprocess
+import sys
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def forced_mesh_env(devices: int) -> dict:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
+    env["JAX_PLATFORMS"] = "cpu"       # device forcing is host-platform only
+    env["PYTHONPATH"] = "src"
+    return env
+
+
+def probe_forced_mesh(devices: int) -> bool:
+    """Can this runner force a `devices`-wide CPU mesh?"""
+    r = subprocess.run(
+        [sys.executable, "-c", "import jax; print(len(jax.devices()))"],
+        capture_output=True, text=True, env=forced_mesh_env(devices),
+        timeout=300, cwd=REPO_ROOT)
+    return r.returncode == 0 and r.stdout.strip() == str(devices)

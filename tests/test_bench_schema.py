@@ -1,0 +1,84 @@
+"""Committed BENCH_*.json files must match the keys their writers emit.
+
+`benchmarks/run.py`'s paged / paged_attn / sp_engine sections commit
+machine-readable result files to the repo root for trend tracking. A
+benchmark refactor that renames or drops keys would silently strand the
+committed files (dashboards and the README's claims would then describe
+fields that no run regenerates) — this schema check turns that into a test
+failure. The expected keys below are the writers' output contract:
+`benchmarks/paged_bench.py`, `benchmarks/paged_attn_bench.py`,
+`benchmarks/sp_engine_bench.py` — update BOTH sides in the same PR when a
+section's schema legitimately changes."""
+
+import json
+from pathlib import Path
+
+import pytest
+
+ROOT = Path(__file__).resolve().parent.parent
+
+# file -> {top_level_key: required subkeys (or None for scalar/any)}
+SCHEMAS = {
+    "BENCH_paged.json": {
+        "config": {"max_len", "page_size", "budget_tokens", "n_requests",
+                   "prefix_len", "full"},
+        "dense": {"slots", "budget_tokens", "tokens_per_s", "ticks",
+                  "gvr_hit_rate", "peak_occupancy", "preemptions"},
+        "paged": {"slots", "budget_tokens", "tokens_per_s", "ticks",
+                  "gvr_hit_rate", "peak_occupancy", "preemptions",
+                  "page_size", "num_pages", "peak_page_utilization",
+                  "prefix_hit_rate", "prefix_hit_tokens"},
+    },
+    "BENCH_paged_attn.json": {
+        "config": {"arch", "k", "page_size", "batch", "step_context_lens",
+                   "full"},
+        "per_tick_gather_bytes": None,       # keyed by context length
+        "fused_materializes_logical_kv_view": None,
+        "fused_kv_bound_bytes": None,
+        "step_wall_us_cpu": None,
+        "engine": {"gather", "fused"},
+    },
+    "BENCH_sp_engine.json": {
+        "config": {"arch", "k", "batch", "seq_shards", "context_lens",
+                   "full"},
+        "per_tick_collective_bytes": None,   # keyed by context length
+        "collective_bytes_o1_in_context": None,
+        "per_tick_collective_hlo": {"context_lens", "per_step"},
+        "context_capacity": {"per_device_kv_budget_bytes",
+                             "max_context_single_device",
+                             "max_context_sharded", "capacity_multiplier"},
+        "engine": {"single"},
+        "sharded_tokens_identical_to_single_device": None,
+    },
+}
+
+
+@pytest.mark.parametrize("fname", sorted(SCHEMAS))
+def test_bench_json_schema(fname):
+    path = ROOT / fname
+    assert path.is_file(), (
+        f"{fname} is advertised (README/ROADMAP) but not committed — run "
+        f"the matching benchmarks/run.py section and commit the result")
+    data = json.loads(path.read_text())
+    schema = SCHEMAS[fname]
+    missing = set(schema) - set(data)
+    assert not missing, f"{fname} lost top-level keys: {sorted(missing)}"
+    for key, subkeys in schema.items():
+        if subkeys is None:
+            continue
+        got = set(data[key])
+        assert subkeys <= got, (
+            f"{fname}[{key!r}] lost keys: {sorted(subkeys - got)}")
+
+
+def test_bench_acceptance_flags_still_true():
+    """The committed results must not carry failed acceptance flags — a
+    stale file from before an assert was added would otherwise pass the
+    pure key check."""
+    pa = json.loads((ROOT / "BENCH_paged_attn.json").read_text())
+    assert pa["fused_materializes_logical_kv_view"] is False
+    sp = json.loads((ROOT / "BENCH_sp_engine.json").read_text())
+    assert sp["collective_bytes_o1_in_context"] is True
+    assert sp["sharded_tokens_identical_to_single_device"] is True
+    assert sp["context_capacity"]["capacity_multiplier"] == \
+        sp["config"]["seq_shards"]

@@ -203,6 +203,7 @@ def test_shared_prefix_reuse_and_exactness(model_and_params):
     paged.kv.pool.assert_consistent()
 
 
+@pytest.mark.slow
 @settings(max_examples=6, deadline=None)
 @given(data=st.data())
 def test_property_paged_equals_dense(data):
@@ -432,3 +433,202 @@ def test_paged_sustains_2x_slots_at_equal_memory(model_and_params):
         assert a.generated == b.generated, a.uid
     assert rep.preemptions == 0
     assert rep.prefix_hit_tokens > 0                # sharing did the paying
+
+
+# ---------------- sharded pool accounting (seq_shards > 1) ----------------
+#
+# Regressions from the sequence-sharded wiring (PR 4): engine/benchmark
+# code had grown `self.kv.pool.*` accesses that hard-assumed one global
+# BlockPool, and the submit-time sizing check compared a request's worst-
+# case page count against the AGGREGATE pool — both wrong once the pool
+# partitions per shard. The engine now goes through the manager-level
+# accessors pinned here.
+
+def test_manager_level_accounting_matches_pool():
+    """PagedKVManager's manager-level accessors (the only ones the engine
+    may use) must track its single pool exactly."""
+    kv = PagedKVManager(num_slots=2, max_len=32, page_size=8, num_pages=6)
+    assert (kv.num_pages, kv.pages_in_use, kv.num_free) == (6, 0, 6)
+    assert kv.admit(0, np.arange(20, dtype=np.int32)) is not None
+    assert kv.pages_in_use == kv.pool.pages_in_use == 3
+    assert kv.num_free == kv.pool.num_free == 3
+    assert kv.can_ever_hold(6 * 8) and not kv.can_ever_hold(6 * 8 + 1)
+
+
+def test_sharded_admission_routes_pages_to_owner_shards():
+    """A prompt spanning the shard boundary must draw each logical page
+    from ITS owner shard's pool (local ids), and release must return every
+    ref to the right pool."""
+    from repro.serve import ShardedPagedKVManager
+    kv = ShardedPagedKVManager(num_slots=2, max_len=64, page_size=8,
+                               num_pages_per_shard=4, seq_shards=2)
+    # 40 tokens -> logical pages 0..4: pages 0-3 in shard 0, page 4 in shard 1
+    plan = kv.admit(0, np.arange(40, dtype=np.int32))
+    assert plan is not None and plan.shared_pages == 0
+    assert kv.pools[0].pages_in_use == 4
+    assert kv.pools[1].pages_in_use == 1
+    assert kv.pages_in_use == 5 and kv.num_pages == 8
+    # pressure telemetry reports the HOTTEST shard, not the aggregate
+    # (5/8 would hide that shard 0 is full)
+    assert kv.hot_pool_utilization == 1.0
+    assert [s for s, _ in kv.slot_pages(0)] == [0, 0, 0, 0, 1]
+    table = kv.table_array()
+    assert (table[0, :5] >= 0).all() and (table[0, 5:] == -1).all()
+    kv.release_slot(0)
+    assert kv.pages_in_use == 0
+    kv.assert_consistent()
+
+
+def test_sharded_capacity_is_per_shard_not_aggregate():
+    """The global-pool sizing check is insufficient under sharding: a
+    prompt confined to shard 0's span can exceed shard 0's pool while
+    fitting the aggregate. Both the submit-time `can_ever_hold` and the
+    admission fail-over must account per shard."""
+    from repro.serve import ShardedPagedKVManager
+    kv = ShardedPagedKVManager(num_slots=2, max_len=64, page_size=8,
+                               num_pages_per_shard=3, seq_shards=2,
+                               prefix_caching=False)
+    # 4 pages, all in shard 0's span ([0, 32)): aggregate pool holds 6
+    assert not kv.can_ever_hold(32)
+    assert kv.can_ever_hold(24)
+    assert kv.admit(0, np.arange(32, dtype=np.int32)) is None   # fail-over
+    assert kv.pages_in_use == 0                                  # nothing leaked
+    # spanning both shards the same 4 pages fit: 2 + 2
+    kv2 = ShardedPagedKVManager(num_slots=2, max_len=48, page_size=8,
+                                num_pages_per_shard=3, seq_shards=2,
+                                prefix_caching=False)
+    assert kv2.admit(0, np.arange(32, dtype=np.int32)) is not None
+
+
+def test_sharded_exhaustion_raises_for_owner_shard_only():
+    """ensure_mapped must raise when the OWNER shard's pool is empty even
+    if other shards have free pages (and carry the shard in the error)."""
+    from repro.serve import ShardedPagedKVManager
+    kv = ShardedPagedKVManager(num_slots=2, max_len=64, page_size=8,
+                               num_pages_per_shard=2, seq_shards=2,
+                               prefix_caching=False)
+    kv.admit(0, np.arange(16, dtype=np.int32))    # shard 0: both pages used
+    kv.admit(1, np.arange(9, dtype=np.int32))     # needs shard-0 page -> fail
+    assert kv.pools[0].num_free == 0 and kv.pools[1].num_free == 2
+    with pytest.raises(PoolExhausted, match="shard 0"):
+        kv.ensure_mapped(0, 16)                   # pos 16 -> page 2 -> shard 0
+    # pos 32 -> logical page 4 -> shard 1, whose pool has room
+    kv.ensure_mapped(0, 32)
+    assert kv.pools[1].pages_in_use == 1
+
+
+def test_sharded_prefix_chain_spans_shard_boundary():
+    """A cached prompt prefix longer than one shard's span must be
+    re-acquired page-by-page from BOTH pools on the sharer's admission
+    (composite (shard, page) handles through the routed pool view)."""
+    from repro.serve import ShardedPagedKVManager
+    kv = ShardedPagedKVManager(num_slots=2, max_len=64, page_size=8,
+                               num_pages_per_shard=4, seq_shards=2)
+    prompt = np.arange(41, dtype=np.int32)        # 5 full pages + 1 token
+    kv.admit(0, prompt)
+    kv.commit_prefix(0, prompt)                   # 5 pages cached: 4 + 1
+    plan = kv.admit(1, prompt)
+    assert plan is not None
+    assert plan.shared_pages == 5                 # crosses the boundary
+    assert plan.skip_len == 40
+    # the 5 shared pages are refcounted in their owner pools (4 + 1); only
+    # the 41st token's partial page allocates fresh, once per slot (shard 1)
+    assert kv.pools[0].pages_in_use == 4 and kv.pools[1].pages_in_use == 3
+    for lp in range(5):
+        shard = kv.owner(lp)
+        phys = kv.tables[1].get(lp)
+        assert kv.tables[0].get(lp) == phys
+        assert kv.pools[shard].refcount[phys] >= 2
+    kv.release_slot(0)
+    kv.release_slot(1)
+    assert kv.reclaim(8) == 5                     # cache refs were the last
+    assert kv.pages_in_use == 0
+    kv.assert_consistent()
+
+
+def test_sharded_cow_descriptor_carries_shard():
+    """ensure_writable must report (shard, src, dst) with a dst from the
+    SAME shard's pool — the engine's device copy stays inside the shard's
+    pool slice."""
+    from repro.serve import ShardedPagedKVManager
+    kv = ShardedPagedKVManager(num_slots=2, max_len=64, page_size=8,
+                               num_pages_per_shard=4, seq_shards=2)
+    prompt = np.arange(40, dtype=np.int32)        # page 4 lives in shard 1
+    kv.admit(0, prompt)
+    kv.commit_prefix(0, prompt)
+    kv.admit(1, prompt)                           # shares all 5 pages
+    cow = kv.ensure_writable(1, 39)               # pos 39 -> page 4, shared
+    assert cow is not None
+    shard, src, dst = cow
+    assert shard == 1 and src != dst
+    assert kv.pools[1].refcount[dst] == 1
+    assert kv.tables[1].get(4) == dst and kv.tables[0].get(4) == src
+    kv.assert_consistent()
+
+
+def test_sharded_reclaim_frees_only_target_shard():
+    """The shard-filtered reclaim view must never free another shard's
+    cold cache pages (that would relieve nothing and forfeit reuse)."""
+    from repro.serve import ShardedPagedKVManager
+    kv = ShardedPagedKVManager(num_slots=2, max_len=64, page_size=8,
+                               num_pages_per_shard=4, seq_shards=2)
+    prompt = np.arange(40, dtype=np.int32)        # 4 shard-0 + 1 shard-1 page
+    kv.admit(0, prompt)
+    kv.commit_prefix(0, prompt)
+    kv.release_slot(0)                            # cache-only refs remain
+    assert (kv.pools[0].pages_in_use, kv.pools[1].pages_in_use) == (4, 1)
+    assert kv.reclaim(8, shard=1) == 1
+    assert (kv.pools[0].pages_in_use, kv.pools[1].pages_in_use) == (4, 0)
+    assert kv.reclaim(8, shard=0) == 4
+    assert kv.pages_in_use == 0
+    kv.assert_consistent()
+
+
+def test_doomed_admission_leaves_prefix_cache_untouched():
+    """A request that can NEVER admit (its non-shared pages exceed what the
+    pool can yield even after reclaiming cold cache pages) retries every
+    tick while queued; each retry must be fully side-effect-free. The
+    subtle case: the capacity pre-check must not budget the prefix-HIT
+    pages as reclaimable — they are acquired, not reclaimed — or the
+    doomed attempt reaches the match/rollback path and inflates
+    queries/hit_pages and warms LRU order on every tick."""
+    kv = PagedKVManager(num_slots=2, max_len=64, page_size=8, num_pages=5)
+    a = np.arange(24, dtype=np.int32)               # 3 full pages, cached
+    kv.admit(0, a); kv.commit_prefix(0, a); kv.release_slot(0)
+    b = np.arange(100, 116, dtype=np.int32)         # 2 more cached pages
+    kv.admit(0, b); kv.commit_prefix(0, b); kv.release_slot(0)
+    assert kv.pages_in_use == 5 and kv.num_free == 0
+    q0, h0 = kv.prefix.queries, kv.prefix.hit_pages
+    doomed = np.concatenate([a, np.arange(200, 224, dtype=np.int32)])
+    for _ in range(3):                              # 6 pages: 3 hits + 3 new,
+        assert kv.admit(0, doomed) is None          # only 2 reclaimable
+    assert kv.prefix.queries == q0                  # no match() ran
+    assert kv.prefix.hit_pages == h0
+    kv.pool.assert_consistent()
+    # LRU order untouched: the oldest entry is still promptA's first page,
+    # so one reclaim breaks A's chain (a warmed A would sacrifice B first)
+    assert kv.reclaim(1) == 1
+    assert kv.prefix.probe(chain_hashes(a, 8)) == 0
+    assert kv.prefix.probe(chain_hashes(b, 8)) == 2
+
+
+def test_sharded_doomed_admission_leaves_prefix_cache_untouched():
+    """Same contract per shard: shard 0 saturated by cache-resident pages,
+    a doomed prompt whose shard-0 demand exceeds what shard 0 can yield
+    must bounce at the side-effect-free pre-check."""
+    from repro.serve import ShardedPagedKVManager
+    kv = ShardedPagedKVManager(num_slots=2, max_len=64, page_size=8,
+                               num_pages_per_shard=3, seq_shards=2)
+    a = np.arange(16, dtype=np.int32)               # 2 shard-0 pages, cached
+    kv.admit(0, a); kv.commit_prefix(0, a); kv.release_slot(0)
+    b = np.arange(100, 108, dtype=np.int32)         # 1 more, cached
+    kv.admit(0, b); kv.commit_prefix(0, b); kv.release_slot(0)
+    assert kv.pools[0].num_free == 0                # all 3 cache-resident
+    q0, h0 = kv.prefix.queries, kv.prefix.hit_pages
+    # 32 tokens: 2 hit pages + 2 new shard-0 pages, but only 1 page (b's)
+    # is genuinely reclaimable — counting the hits would claim 3
+    doomed = np.concatenate([a, np.arange(200, 216, dtype=np.int32)])
+    for _ in range(3):
+        assert kv.admit(0, doomed) is None
+    assert kv.prefix.queries == q0 and kv.prefix.hit_pages == h0
+    kv.assert_consistent()

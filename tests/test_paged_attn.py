@@ -218,6 +218,7 @@ def _random_paged_state(cfg, model, rng, *, page_size, batch, max_len):
     return state, tokens
 
 
+@pytest.mark.slow
 @settings(max_examples=5, deadline=None)
 @given(data=st.data())
 def test_property_fused_bit_identical_to_gather(data):

@@ -11,6 +11,7 @@ seeded-examples shim (tests/_hypothesis_compat.py).
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from _hypothesis_compat import given, settings, st
 
@@ -38,6 +39,7 @@ def _scores(rng, b, n, dist):
     return x.astype(np.float32)
 
 
+@pytest.mark.slow
 @settings(max_examples=40, deadline=None)
 @given(
     n=st.integers(32, 512),
@@ -76,6 +78,7 @@ def test_property_all_paths_exact_topk(n, k_frac, dist, method, ragged, seed):
         np.sort(np.take_along_axis(xm, want_idx, -1), -1))
 
 
+@pytest.mark.slow
 @settings(max_examples=40, deadline=None)
 @given(
     n=st.integers(128, 512),

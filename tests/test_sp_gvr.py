@@ -8,6 +8,8 @@ import sys
 
 import pytest
 
+pytestmark = [pytest.mark.mesh, pytest.mark.slow]
+
 _SCRIPT = r"""
 import jax, jax.numpy as jnp, numpy as np, json
 from repro.core import sp_gvr_topk, exact_topk
@@ -40,12 +42,12 @@ print("RESULT:" + json.dumps(out))
 
 @pytest.fixture(scope="module")
 def sp_results():
-    env = dict(os.environ)
-    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
-    env["PYTHONPATH"] = "src"
+    from _mesh_compat import REPO_ROOT, forced_mesh_env, probe_forced_mesh
+    if not probe_forced_mesh(8):
+        pytest.skip("runner cannot force an 8-device CPU mesh")
     r = subprocess.run([sys.executable, "-c", _SCRIPT], capture_output=True,
-                       text=True, env=env, timeout=600,
-                       cwd=os.path.dirname(os.path.dirname(__file__)))
+                       text=True, env=forced_mesh_env(8), timeout=600,
+                       cwd=REPO_ROOT)
     assert r.returncode == 0, r.stderr[-3000:]
     line = [l for l in r.stdout.splitlines() if l.startswith("RESULT:")][0]
     return json.loads(line[len("RESULT:"):])
