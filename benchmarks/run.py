@@ -21,12 +21,14 @@ def _register():
     from . import paged_attn_bench as pab
     from . import paged_bench as pb
     from . import sp_engine_bench as spb
+    from . import spec_bench as spcb
     from . import system_bench as sb
     SECTIONS.update({
         "engine": eb.bench_engine,
         "paged": pb.bench_paged,
         "paged_attn": pab.bench_paged_attn,
         "sp_engine": spb.bench_sp_engine,
+        "spec": spcb.bench_spec,
         "table1": ob.bench_table1_pass_counts,
         "table6": ob.bench_table6_synthetic_latency,
         "table7": ob.bench_table7_per_layer_speedup,

@@ -1,0 +1,23 @@
+#!/usr/bin/env sh
+# Tier-2 smoke: run the speculative-decoding benchmark on CPU.
+#
+#   ./benchmarks/smoke_spec.sh
+#
+# Exercises the draft–verify–rollback subsystem end to end: the oracle-
+# replay (100%-acceptance) legs assert the speculative engine's tokens are
+# bit-identical to non-speculative decode at every draft depth and that
+# the best depth clears >= 1.5x the non-speculative tokens/s, and the
+# GVR-hit-rate-vs-draft-depth table (the paper's spec-decoding question)
+# is recorded per depth. Leaves BENCH_spec.json in the repo root. Exits
+# non-zero if the section's acceptance asserts fail or the section errors.
+set -eu
+cd "$(dirname "$0")/.."
+export JAX_PLATFORMS="${JAX_PLATFORMS:-cpu}"
+PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" python -m benchmarks.run spec | tee /tmp/spec_bench.out
+# benchmarks/run.py swallows section exceptions into */ERROR rows — fail on them
+if grep -q "ERROR" /tmp/spec_bench.out; then
+    echo "spec benchmark reported an error" >&2
+    exit 1
+fi
+test -f BENCH_spec.json
+echo "spec smoke OK"

@@ -29,6 +29,13 @@ the unique deterministic exact Top-K with lowest-global-index tie policy.
 Usage: call `sp_gvr_topk_local` INSIDE a shard_map whose `axis_name` shards
 the score row's last dimension. Helpers at the bottom wrap a full shard_map
 for convenience/testing.
+
+Speculative verify ticks (DESIGN.md §spec-decode) run this schedule once
+per draft position with the PREVIOUS POSITION's selection as `prev_idx`
+(the causally-extended temporal prior): intra-tick correlation is at least
+the inter-tick correlation the paper measures, so Phase 2's data-aware
+iteration count — and with it the collective schedule length — carries
+over to multi-token steps unchanged.
 """
 
 from __future__ import annotations

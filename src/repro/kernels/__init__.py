@@ -10,12 +10,19 @@
 - paged_sparse_decode_attn : block-table-native sparse attention — the
                        index_map composes table[idx // page_size] with the
                        Top-K gather, O(K) traffic independent of N
+- paged_sparse_decode_attn_mq / paged_indexer_topk_mq : multi-query-row
+                       forms of the two paged hot spots for the speculative
+                       verify tick (serve.spec): d+1 draft positions per
+                       slot in one launch, with the GVR feedback threaded
+                       across query rows inside the indexer kernel
 
 ops.py exposes the jit'd wrappers; ref.py the pure-jnp oracles.
 """
 
 from .ops import (gvr_topk, indexer_topk, paged_gather, paged_indexer_topk,
-                  paged_sparse_decode_attn, sparse_decode_attn)
+                  paged_indexer_topk_mq, paged_sparse_decode_attn,
+                  paged_sparse_decode_attn_mq, sparse_decode_attn)
 
 __all__ = ["gvr_topk", "indexer_topk", "paged_gather", "paged_indexer_topk",
-           "paged_sparse_decode_attn", "sparse_decode_attn"]
+           "paged_indexer_topk_mq", "paged_sparse_decode_attn",
+           "paged_sparse_decode_attn_mq", "sparse_decode_attn"]

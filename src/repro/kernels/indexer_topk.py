@@ -247,3 +247,132 @@ def paged_indexer_topk_pallas(q: jnp.ndarray, k_pages: jnp.ndarray,
         kern, grid_spec=grid_spec, out_shape=out_shapes, interpret=interpret,
     )(table.astype(jnp.int32), q, k_pages, w,
       prev_idx.astype(jnp.int32), lengths.astype(jnp.int32))
+
+
+# --------------------------------------------------------------------------
+# Multi-query-row paged variant — the speculative verify tick's selection
+# hot spot, with GVR's temporal feedback threaded ACROSS the query rows
+# inside the kernel (DESIGN.md §spec-decode).
+# --------------------------------------------------------------------------
+
+def _paged_fused_mq_kernel(table_ref, q_ref, pages_ref, w_ref, prev_ref,
+                           len_ref, out_vals_ref, out_idx_ref, stats_ref,
+                           scores_scr, prev_scr, cand_vals_ref, cand_idx_ref,
+                           out_v_scr, out_i_scr,
+                           *, k, cmax, n, m, page_size, chunk, max_secant,
+                           f_target, mp):
+    b = pl.program_id(0)
+    qq = pl.program_id(1)
+    j = pl.program_id(2)
+    q = q_ref[0, 0]                                        # (H, D)
+    kc = pages_ref[0]                                      # (page_size, D)
+    w = w_ref[0]                                           # (H,)
+    s = jnp.maximum(jnp.dot(q.astype(jnp.float32), kc.astype(jnp.float32).T), 0.0)
+    scores = jnp.dot(w.astype(jnp.float32), s)             # (page_size,)
+    # per-query-row causal extent: verify position q masks beyond ITS
+    # length (the engine passes lengths[b, q] = L0 + q + 1)
+    length = len_ref[0, 0]
+    pos = (jax.lax.broadcasted_iota(jnp.int32, (1, page_size), 1)[0]
+           + j * page_size)
+    mapped = table_ref[b, j] >= 0
+    scores = jnp.where((pos < length) & mapped, scores, NEG)
+    scores_scr[pl.ds(j * page_size, page_size)] = scores
+
+    @pl.when(j == mp - 1)
+    def _():
+        # the causally-extended feedback: query row 0 warms from the
+        # caller's prev_idx (the previous TICK's selection); every later
+        # row warms from the row BEFORE it in this launch, carried in a
+        # VMEM scratch — no HBM round-trip between draft positions
+        prev = jnp.where(qq == 0, prev_ref[0, :], prev_scr[...])
+        gvr_on_resident_row(scores_scr[...], prev,
+                            out_vals_ref, out_idx_ref, stats_ref,
+                            cand_vals_ref, cand_idx_ref, out_v_scr, out_i_scr,
+                            k=k, cmax=cmax, n=n, m=m, chunk=chunk,
+                            max_secant=max_secant, f_target=f_target)
+        prev_scr[...] = out_idx_ref[0, :]
+
+
+def paged_indexer_topk_mq_pallas(q: jnp.ndarray, k_pages: jnp.ndarray,
+                                 w: jnp.ndarray, table: jnp.ndarray,
+                                 prev_idx: jnp.ndarray, k: int,
+                                 *, lengths: jnp.ndarray,
+                                 chunk: int = DEFAULT_CHUNK,
+                                 max_candidates: Optional[int] = None,
+                                 max_secant_iters: int = 12,
+                                 f_target: Optional[int] = None,
+                                 interpret: bool = True):
+    """Fused paged indexer+GVR over Q query rows per slot (the verify
+    tick's d+1 draft positions). q: (B, Q, H, D); k_pages: (P, page_size,
+    D) global indexer-K page pool; table: (B, MP) int32 shared block
+    table; prev_idx: (B, K) int32 LOGICAL indices — query row 0's warm
+    start, i.e. the previous TICK's Top-K; lengths: (B, Q) int32 — row
+    q's causal extent (position L0 + q attends to L0 + q + 1 tokens).
+
+    `prev_idx` must carry exactly K entries: rows 1..Q-1 warm-start from
+    the PREVIOUS ROW's emitted Top-K, threaded through a VMEM scratch
+    inside the launch — the kernel form of the verify scan's causally-
+    extended feedback, so the temporal-correlation signal never leaves
+    the chip between draft positions.
+
+    Returns (values (B, Q, K), indices (B, Q, K) int32 logical,
+    stats (B, Q, 8)).
+    """
+    b, qn, h, d = q.shape
+    page_size = k_pages.shape[1]
+    mp = table.shape[1]
+    n = mp * page_size
+    m = prev_idx.shape[-1]
+    assert m == k, ("the mq kernel threads each row's K-entry output into "
+                    "the next row's warm start, so prev_idx must carry "
+                    f"exactly K entries; got M={m}, K={k}")
+    assert n % chunk == 0, (n, chunk)
+    if w.ndim == 1:
+        w = jnp.broadcast_to(w[None], (b, h))
+    cmax = max_candidates if max_candidates is not None else min(3 * k, n)
+    cmax = max(cmax, k)
+    cpad = ((cmax + chunk - 1) // chunk + 1) * chunk
+    opad = ((k + chunk - 1) // chunk + 1) * chunk
+    ft = f_target if f_target is not None else (k + cmax) // 2
+
+    kern = functools.partial(_paged_fused_mq_kernel, k=k, cmax=cmax, n=n,
+                             m=m, page_size=page_size, chunk=chunk,
+                             max_secant=max_secant_iters, f_target=ft, mp=mp)
+    # outputs flattened to (B*Q, ...) so gvr_on_resident_row's (1, K)
+    # block writes apply unchanged; reshaped on return
+    out_shapes = (
+        jax.ShapeDtypeStruct((b * qn, k), jnp.float32),
+        jax.ShapeDtypeStruct((b * qn, k), jnp.int32),
+        jax.ShapeDtypeStruct((b * qn, 8), jnp.float32),
+    )
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(b, qn, mp),
+        in_specs=[
+            pl.BlockSpec((1, 1, h, d), lambda i, qq, j, t: (i, qq, 0, 0)),
+            pl.BlockSpec((1, page_size, d),
+                         lambda i, qq, j, t: (jnp.maximum(t[i, j], 0), 0, 0)),
+            pl.BlockSpec((1, h), lambda i, qq, j, t: (i, 0)),
+            pl.BlockSpec((1, m), lambda i, qq, j, t: (i, 0)),
+            pl.BlockSpec((1, 1), lambda i, qq, j, t: (i, qq)),
+        ],
+        out_specs=(
+            pl.BlockSpec((1, k), lambda i, qq, j, t: (i * qn + qq, 0)),
+            pl.BlockSpec((1, k), lambda i, qq, j, t: (i * qn + qq, 0)),
+            pl.BlockSpec((1, 8), lambda i, qq, j, t: (i * qn + qq, 0)),
+        ),
+        scratch_shapes=[
+            pltpu_vmem((n,), jnp.float32),        # resident scores (never HBM)
+            pltpu_vmem((k,), jnp.int32),          # cross-row feedback thread
+            pltpu_vmem((cpad,), jnp.float32),
+            pltpu_vmem((cpad,), jnp.float32),
+            pltpu_vmem((opad,), jnp.float32),
+            pltpu_vmem((opad,), jnp.float32),
+        ],
+    )
+    vals, idx, stats = pl.pallas_call(
+        kern, grid_spec=grid_spec, out_shape=out_shapes, interpret=interpret,
+    )(table.astype(jnp.int32), q, k_pages, w,
+      prev_idx.astype(jnp.int32), lengths.astype(jnp.int32))
+    return (vals.reshape(b, qn, k), idx.reshape(b, qn, k),
+            stats.reshape(b, qn, 8))

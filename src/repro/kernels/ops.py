@@ -15,9 +15,11 @@ import jax
 import jax.numpy as jnp
 
 from .gvr_topk import DEFAULT_CHUNK, gvr_topk_pallas
-from .indexer_topk import indexer_topk_pallas, paged_indexer_topk_pallas
+from .indexer_topk import (indexer_topk_pallas, paged_indexer_topk_mq_pallas,
+                           paged_indexer_topk_pallas)
 from .paged_gather import paged_gather_pallas
-from .sparse_attn import (paged_sparse_decode_attn_pallas,
+from .sparse_attn import (paged_sparse_decode_attn_mq_pallas,
+                          paged_sparse_decode_attn_pallas,
                           sparse_decode_attn_pallas)
 
 NEG = -3.4028235e38
@@ -136,6 +138,55 @@ def paged_sparse_decode_attn(q: jnp.ndarray, k_pages: jnp.ndarray,
     """
     return paged_sparse_decode_attn_pallas(q, k_pages, v_pages, table, idx,
                                            scale=scale, interpret=interpret)
+
+
+@partial(jax.jit, static_argnames=("scale", "interpret"))
+def paged_sparse_decode_attn_mq(q: jnp.ndarray, k_pages: jnp.ndarray,
+                                v_pages: jnp.ndarray, table: jnp.ndarray,
+                                idx: jnp.ndarray, *,
+                                scale: Optional[float] = None,
+                                interpret: bool = True):
+    """Multi-query-row block-table-native sparse decode attention
+    (B,Q,H,DV) — the speculative verify tick's attention hot spot: the
+    d+1 draft positions of each slot gather their own Top-K rows against
+    the shared block table in ONE launch (grid gains a query-row axis;
+    addressing and masking are the single-row kernel's verbatim)."""
+    return paged_sparse_decode_attn_mq_pallas(q, k_pages, v_pages, table,
+                                              idx, scale=scale,
+                                              interpret=interpret)
+
+
+@partial(jax.jit, static_argnames=("k", "chunk", "interpret"))
+def paged_indexer_topk_mq(q: jnp.ndarray, k_pages: jnp.ndarray,
+                          w: jnp.ndarray, table: jnp.ndarray,
+                          prev_idx: jnp.ndarray, k: int, *,
+                          lengths: jnp.ndarray,
+                          chunk: int = DEFAULT_CHUNK,
+                          interpret: bool = True):
+    """Fused paged indexer + GVR Top-K over Q query rows per slot, with
+    the verify tick's causally-extended feedback threaded INSIDE the
+    launch: row 0 warms from `prev_idx` (the previous tick's Top-K,
+    exactly K entries), every later row from the row before it, via a
+    VMEM scratch — the temporal signal never round-trips HBM between
+    draft positions. `lengths` is (B, Q): row q's causal extent. The
+    table is padded here with -1 columns to meet the GVR chunk lattice,
+    as in `paged_indexer_topk`.
+
+    Returns (values (B,Q,K), indices (B,Q,K) logical, stats (B,Q,8)).
+    """
+    b, qn = q.shape[:2]
+    page_size = k_pages.shape[1]
+    mp = table.shape[1]
+    n = mp * page_size
+    chunk = max(32, (min(chunk, n) // 32) * 32)
+    mp_pad = mp
+    while (mp_pad * page_size) % chunk:
+        mp_pad += 1
+    if mp_pad != mp:
+        table = jnp.pad(table, ((0, 0), (0, mp_pad - mp)), constant_values=-1)
+    return paged_indexer_topk_mq_pallas(q, k_pages, w, table, prev_idx, k,
+                                        lengths=lengths, chunk=chunk,
+                                        interpret=interpret)
 
 
 @partial(jax.jit, static_argnames=("k", "chunk", "interpret"))

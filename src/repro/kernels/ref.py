@@ -73,6 +73,20 @@ def paged_attn_ref(q: jnp.ndarray, k_pages: jnp.ndarray, v_pages: jnp.ndarray,
     return jnp.einsum("bhk,bkhd->bhd", pr, vq.astype(jnp.float32))
 
 
+def paged_attn_mq_ref(q: jnp.ndarray, k_pages: jnp.ndarray,
+                      v_pages: jnp.ndarray, table: jnp.ndarray,
+                      idx: jnp.ndarray, scale=None):
+    """Multi-query-row oracle for `paged_sparse_decode_attn_mq`: each of
+    the Q query rows (the verify tick's draft positions) runs the
+    single-row paged oracle against the SAME pools/block table.
+
+    q: (B, Q, H, D); idx: (B, Q, K). Returns (B, Q, H, DV) f32.
+    """
+    return jax.vmap(lambda qr, ir: paged_attn_ref(qr, k_pages, v_pages,
+                                                  table, ir, scale=scale),
+                    in_axes=(1, 1), out_axes=1)(q, idx)
+
+
 def sparse_decode_attn_ref(q: jnp.ndarray, kcache: jnp.ndarray, vcache: jnp.ndarray,
                            idx: jnp.ndarray, counts=None, scale=None):
     """Sparse decode attention oracle: attend only over gathered Top-K rows.

@@ -271,3 +271,117 @@ def paged_sparse_decode_attn_pallas(q: jnp.ndarray, k_pages: jnp.ndarray,
     out_shape = jax.ShapeDtypeStruct((b, h, dv), jnp.float32)
     return pl.pallas_call(kern, grid_spec=grid_spec, out_shape=out_shape,
                           interpret=interpret)(table, idx, q, k_pages, v_pages)
+
+
+# --------------------------------------------------------------------------
+# Multi-query-row paged variant — the speculative verify tick's hot-spot
+# form: d+1 query rows per slot attend over their own Top-K selections
+# against the SAME page pools/block table in one launch.
+# --------------------------------------------------------------------------
+
+def _paged_attn_mq_kernel(table_ref, idx_ref, q_ref, k_ref, v_ref, o_ref,
+                          m_scr, l_scr, acc_scr, *, nsteps, scale, h, kvh,
+                          dv, page_size, n_logical):
+    b = pl.program_id(0)
+    qq = pl.program_id(1)
+    j = pl.program_id(2)
+    g = h // kvh
+
+    @pl.when(j == 0)
+    def _():
+        m_scr[...] = jnp.full_like(m_scr[...], -jnp.inf)
+        l_scr[...] = jnp.zeros_like(l_scr[...])
+        acc_scr[...] = jnp.zeros_like(acc_scr[...])
+
+    q = q_ref[0, 0].astype(jnp.float32)                  # (H, D)
+    kb = k_ref[0, 0].astype(jnp.float32)                 # (KVH, D)
+    vb = v_ref[0, 0].astype(jnp.float32)                 # (KVH, DV)
+
+    # validity mirrors the single-row kernel, per query row: an entry
+    # contributes iff non-negative AND its logical page is mapped
+    li = idx_ref[b, qq, j]
+    li_safe = jnp.clip(li, 0, n_logical - 1)
+    valid = (li >= 0) & (table_ref[b, li_safe // page_size] >= 0)
+
+    qg = q.reshape(kvh, g, -1)
+    logits = jnp.einsum("khd,kd->kh", qg, kb).reshape(h, 1) * scale
+    logits = jnp.where(valid, logits, -jnp.inf)
+
+    m_prev = m_scr[...]                                   # (H, 1)
+    l_prev = l_scr[...]
+    m_new = jnp.maximum(m_prev, logits)
+    m_safe = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+    alpha = jnp.where(jnp.isfinite(m_prev), jnp.exp(m_prev - m_safe), 0.0)
+    p = jnp.exp(jnp.where(jnp.isfinite(logits), logits - m_safe, -jnp.inf))
+    p = jnp.where(jnp.isfinite(logits), p, 0.0)           # (H, 1)
+    l_scr[...] = l_prev * alpha + p
+    pv = jnp.einsum("kg,kd->kgd", p.reshape(kvh, g), vb).reshape(h, dv)
+    acc_scr[...] = acc_scr[...] * alpha + pv
+    m_scr[...] = m_new
+
+    @pl.when(j == nsteps - 1)
+    def _():
+        l = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0, 0] = (acc_scr[...] / l).astype(o_ref.dtype)
+
+
+def paged_sparse_decode_attn_mq_pallas(q: jnp.ndarray, k_pages: jnp.ndarray,
+                                       v_pages: jnp.ndarray,
+                                       table: jnp.ndarray, idx: jnp.ndarray,
+                                       *, scale: Optional[float] = None,
+                                       interpret: bool = True):
+    """q: (B, Q, H, D) — Q query rows per slot (the verify tick's d+1 draft
+    positions); k/v_pages: (P, page_size, KVH, D[v]) global page pools;
+    table: (B, MP) int32 block table shared by all of a slot's query rows;
+    idx: (B, Q, K) int32 LOGICAL Top-K indices per query row, -1-padded.
+
+    The grid grows a query-row axis — (B, Q, K) — and everything else is
+    the single-row kernel verbatim: both lookups stay scalar-prefetched,
+    the flash accumulators reset per (slot, query row), and each grid step
+    DMAs one (KVH × D) row straight from the page pool. Per verify tick
+    exactly (d+1)·K rows move — O(K) per position, the same bound the
+    one-token step pays, amortizing the Q·H query traffic over one launch.
+
+    Returns (B, Q, H, DV) f32.
+    """
+    b, qn, h, d = q.shape
+    p_pages, page_size, kvh = k_pages.shape[:3]
+    dv = v_pages.shape[-1]
+    mp = table.shape[1]
+    n_logical = mp * page_size
+    kk = idx.shape[-1]
+    scale = scale if scale is not None else 1.0 / (d ** 0.5)
+
+    table = table.astype(jnp.int32)
+    idx = idx.astype(jnp.int32)
+
+    def _phys(i, qq, j, table_ref, idx_ref):
+        li = jnp.clip(idx_ref[i, qq, j], 0, n_logical - 1)
+        pg = jnp.maximum(table_ref[i, li // page_size], 0)
+        return pg, li % page_size
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(b, qn, kk),
+        in_specs=[
+            pl.BlockSpec((1, 1, h, d), lambda i, qq, j, t, x: (i, qq, 0, 0)),
+            pl.BlockSpec((1, 1, kvh, d),
+                         lambda i, qq, j, t, x: _phys(i, qq, j, t, x) + (0, 0)),
+            pl.BlockSpec((1, 1, kvh, dv),
+                         lambda i, qq, j, t, x: _phys(i, qq, j, t, x) + (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, h, dv),
+                               lambda i, qq, j, t, x: (i, qq, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((h, 1), jnp.float32),
+            pltpu.VMEM((h, 1), jnp.float32),
+            pltpu.VMEM((h, dv), jnp.float32),
+        ],
+    )
+
+    kern = functools.partial(_paged_attn_mq_kernel, nsteps=kk, scale=scale,
+                             h=h, kvh=kvh, dv=dv, page_size=page_size,
+                             n_logical=n_logical)
+    out_shape = jax.ShapeDtypeStruct((b, qn, h, dv), jnp.float32)
+    return pl.pallas_call(kern, grid_spec=grid_spec, out_shape=out_shape,
+                          interpret=interpret)(table, idx, q, k_pages, v_pages)

@@ -107,6 +107,23 @@ class Model:
                   min_write_pos=min_write_pos, paged_attn=paged_attn,
                   mesh=mesh, rules=rules)
 
+    def serve_step_spec_paged(self, params, state, tokens, *, draft_len,
+                              max_accept, eos_id=-1, min_write_pos=None,
+                              paged_attn="fused", mesh=None, rules=None):
+        """Speculative verify tick (serve.spec subsystem): score all d+1
+        draft positions in one jitted scan of the paged step, greedy-accept
+        the longest matching prefix, and roll the decode state back to the
+        accepted point in-graph — see transformer.serve_step_spec_paged."""
+        fn = getattr(self.mod, "serve_step_spec_paged", None)
+        if fn is None:
+            raise NotImplementedError(
+                f"family {self.cfg.family!r} has no speculative paged "
+                f"serve_step")
+        return fn(params, state, tokens, self.cfg, draft_len=draft_len,
+                  max_accept=max_accept, eos_id=eos_id,
+                  min_write_pos=min_write_pos, paged_attn=paged_attn,
+                  mesh=mesh, rules=rules)
+
     # ---- sequence-sharded paged decode (SP-GVR serving path) ------------
     def init_sp_paged_decode_state(self, batch, max_len, *,
                                    num_pages_per_shard, page_size,
@@ -141,6 +158,21 @@ class Model:
                 f"family {self.cfg.family!r} has no sequence-sharded "
                 f"paged serve_step")
         return fn(params, state, tokens, self.cfg, mesh=mesh,
+                  min_write_pos=min_write_pos, rules=rules)
+
+    def serve_step_sp_spec_paged(self, params, state, tokens, *, mesh,
+                                 draft_len, max_accept, eos_id=-1,
+                                 min_write_pos=None, rules=None):
+        """Sequence-sharded speculative verify tick (one shard_map scanning
+        the per-device paged step over the d+1 draft positions) — see
+        transformer.serve_step_sp_spec_paged."""
+        fn = getattr(self.mod, "serve_step_sp_spec_paged", None)
+        if fn is None:
+            raise NotImplementedError(
+                f"family {self.cfg.family!r} has no sequence-sharded "
+                f"speculative paged serve_step")
+        return fn(params, state, tokens, self.cfg, mesh=mesh,
+                  draft_len=draft_len, max_accept=max_accept, eos_id=eos_id,
                   min_write_pos=min_write_pos, rules=rules)
 
     def serve_step(self, params, state, tokens, *, mesh=None, rules=None,

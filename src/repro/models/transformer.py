@@ -523,6 +523,136 @@ def sp_paged_state_batch_axes(cfg: ModelConfig) -> Dict[str, int]:
     return paged_state_batch_axes(cfg)
 
 
+def _sp_paged_validate(state, cfg: ModelConfig, mesh, seq_axis: str) -> None:
+    """Shared entry validation of the sequence-sharded paged steps
+    (`serve_step_sp_paged` and the speculative `serve_step_sp_spec_paged`)."""
+    num_shards = state["k_pages"].shape[1]
+    page_size = state["k_pages"].shape[3]
+    mp = state["page_table"].shape[1]
+    n = mp * page_size
+    if mp % num_shards != 0:
+        raise ValueError(f"logical pages ({mp}) must divide over "
+                         f"{num_shards} shards")
+    if not (cfg.dsa.enabled and n > cfg.dsa.min_n):
+        raise ValueError(
+            "sequence-sharded paged decode requires the DSA gate open "
+            f"(dsa.enabled and max_len > dsa.min_n={cfg.dsa.min_n}): the "
+            "sequence-sharded path has no dense fallback attention")
+    if mesh.shape[seq_axis] != num_shards:
+        raise ValueError(
+            f"state carries {num_shards} shards but mesh axis "
+            f"{seq_axis!r} has {mesh.shape[seq_axis]} devices")
+
+
+def _sp_paged_token_body(params, state, tokens, mwp, cfg: ModelConfig, *,
+                         seq_axis: str):
+    """Per-device body of ONE sequence-sharded paged decode step — executes
+    inside a shard_map over `seq_axis` (state's page-pool leaves arrive as
+    this device's shard slice, everything else replicated). Factored to
+    module level so the speculative verify step can scan it over the d+1
+    draft positions of a verify tick within a single shard_map
+    (`serve_step_sp_spec_paged`); `serve_step_sp_paged` wraps exactly one
+    invocation. Returns (logits, new_state) with the shard axis restored
+    on the pool leaves."""
+    from repro.sparse import sp_dsa as sp_dsa_mod
+    from repro.parallel.sharding import axis_size
+
+    b = tokens.shape[0]
+    hd = cfg.hd
+    ppl = state["k_pages"].shape[2] - 1                  # pages per shard
+    page_size = state["k_pages"].shape[3]
+    mp = state["page_table"].shape[1]
+    num_shards = axis_size(seq_axis)
+    mp_local = mp // num_shards
+    n_local = mp_local * page_size
+    kk = state["prev_topk"].shape[-1]
+
+    my = jax.lax.axis_index(seq_axis)
+    shard_offset = (my * n_local).astype(jnp.int32)
+    table = state["page_table"]                      # (B, MP) replicated
+    table_local = jax.lax.dynamic_slice_in_dim(
+        table, my * mp_local, mp_local, axis=1)      # shard-local slice
+    positions = state["length"]
+    new_len = state["length"] + 1
+    sink = ppl                                       # local sink page id
+
+    # this shard writes iff it owns the write position
+    owner = (positions >= shard_offset) & (positions < shard_offset + n_local)
+    rel = jnp.clip(positions - shard_offset, 0, n_local - 1)
+    phys = jnp.take_along_axis(table_local,
+                               (rel // page_size)[:, None], axis=1)[:, 0]
+    writable = owner & (phys >= 0) & (positions >= mwp)
+    dest = jnp.where(writable, phys, sink)
+    off = positions % page_size                      # page-aligned spans
+    gather_local = jnp.clip(table_local, 0, sink)
+
+    x = params["embed"][tokens]
+
+    def layer(x, carry):
+        p = carry["p"]
+        kp, vp = carry["k_pages"], carry["v_pages"]
+        idx_kp = carry["idx_k_pages"]
+        prev_topk = carry["prev_topk"]
+        topk_valid = carry.get("topk_valid")
+        h = rms_norm(x, p["ln1"])
+        q, kn, vn = _project_qkv(p, h, b, positions, cfg, None)
+        kp = kp.at[dest, off].set(kn.astype(kp.dtype))
+        vp = vp.at[dest, off].set(vn.astype(vp.dtype))
+        ik = dsa_mod.indexer_k(p["indexer"], h, positions,
+                               dim=cfg.dsa.indexer_dim,
+                               rope_base=cfg.rope_base)
+        idx_kp = idx_kp.at[dest, off].set(ik.astype(idx_kp.dtype))
+        # shard-local logical indexer view: N/S × d_i per device — the
+        # irreducible indexer read, now split across the mesh
+        idx_kc = idx_kp[gather_local].reshape(b, n_local,
+                                              cfg.dsa.indexer_dim)
+        res = sp_dsa_mod.sp_dsa_decode_paged_local(
+            q, kp, vp, table_local, p["indexer"], h, idx_kc,
+            prev_topk, topk_valid, new_len,
+            k=kk, scale=hd ** -0.5, heads=cfg.dsa.indexer_heads,
+            dim=cfg.dsa.indexer_dim, rope_base=cfg.rope_base,
+            shard_offset=shard_offset, page_size=page_size,
+            max_candidates=cfg.dsa.max_candidates,
+            swa_window=cfg.swa_window, seq_axis=seq_axis)
+        out = {"k_pages": kp, "v_pages": vp, "idx_k_pages": idx_kp,
+               "p": p, "prev_topk": res.new_topk}
+        if topk_valid is not None:
+            out["topk_valid"] = jnp.ones_like(topk_valid)
+            out["sel_gvr"] = res.gvr_rows
+        attn = res.attn_out.reshape(b, cfg.n_heads * hd).astype(x.dtype)
+        x = x + attn @ p["wo"]
+        h = rms_norm(x, p["ln2"])
+        if cfg.moe.num_experts:
+            m = _mlp(p, h[:, None, :], cfg, None)[:, 0]
+        else:
+            m = _mlp(p, h, cfg, None)
+        x = x + m
+        return x, out
+
+    carry_in = {"p": params["layers"],
+                "k_pages": state["k_pages"][:, 0],
+                "v_pages": state["v_pages"][:, 0],
+                "idx_k_pages": state["idx_k_pages"][:, 0],
+                "prev_topk": state["prev_topk"]}
+    if "topk_valid" in state:
+        carry_in["topk_valid"] = state["topk_valid"]
+    x, outs = jax.lax.scan(layer, x, carry_in)
+
+    new_state = dict(state)
+    for key in ("k_pages", "v_pages", "idx_k_pages"):
+        new_state[key] = outs[key][:, None]          # restore shard axis
+    new_state["prev_topk"] = outs["prev_topk"]
+    if "topk_valid" in state:
+        new_state["topk_valid"] = outs["topk_valid"]
+        new_state["sel_gvr"] = outs["sel_gvr"]
+    new_state["length"] = new_len
+
+    x = rms_norm(x, params["final_norm"])
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = (x @ head).astype(jnp.float32)
+    return logits, new_state
+
+
 def serve_step_sp_paged(params, state, tokens, cfg: ModelConfig, *, mesh,
                         min_write_pos: Optional[jnp.ndarray] = None,
                         seq_axis: str = "seq",
@@ -547,117 +677,13 @@ def serve_step_sp_paged(params, state, tokens, cfg: ModelConfig, *, mesh,
     and the dense fallback attention has no sharded form here.
     """
     b = tokens.shape[0]
-    hd = cfg.hd
-    l, num_shards = state["k_pages"].shape[:2]
-    ppl = state["k_pages"].shape[2] - 1                  # pages per shard
-    page_size = state["k_pages"].shape[3]
-    mp = state["page_table"].shape[1]
-    n = mp * page_size                                   # global logical extent
-    if mp % num_shards != 0:
-        raise ValueError(f"logical pages ({mp}) must divide over "
-                         f"{num_shards} shards")
-    mp_local = mp // num_shards
-    n_local = mp_local * page_size
-    if not (cfg.dsa.enabled and n > cfg.dsa.min_n):
-        raise ValueError(
-            "serve_step_sp_paged requires the DSA gate open "
-            f"(dsa.enabled and max_len > dsa.min_n={cfg.dsa.min_n}): the "
-            "sequence-sharded path has no dense fallback attention")
-    if mesh.shape[seq_axis] != num_shards:
-        raise ValueError(
-            f"state carries {num_shards} shards but mesh axis "
-            f"{seq_axis!r} has {mesh.shape[seq_axis]} devices")
-    kk = state["prev_topk"].shape[-1]
+    _sp_paged_validate(state, cfg, mesh, seq_axis)
     mwp = (min_write_pos if min_write_pos is not None
            else jnp.zeros((b,), jnp.int32))
 
-    from repro.sparse import sp_dsa as sp_dsa_mod
-
     def body(params, state, tokens, mwp):
-        my = jax.lax.axis_index(seq_axis)
-        shard_offset = (my * n_local).astype(jnp.int32)
-        table = state["page_table"]                      # (B, MP) replicated
-        table_local = jax.lax.dynamic_slice_in_dim(
-            table, my * mp_local, mp_local, axis=1)      # shard-local slice
-        positions = state["length"]
-        new_len = state["length"] + 1
-        sink = ppl                                       # local sink page id
-
-        # this shard writes iff it owns the write position
-        owner = (positions >= shard_offset) & (positions < shard_offset + n_local)
-        rel = jnp.clip(positions - shard_offset, 0, n_local - 1)
-        phys = jnp.take_along_axis(table_local,
-                                   (rel // page_size)[:, None], axis=1)[:, 0]
-        writable = owner & (phys >= 0) & (positions >= mwp)
-        dest = jnp.where(writable, phys, sink)
-        off = positions % page_size                      # page-aligned spans
-        gather_local = jnp.clip(table_local, 0, sink)
-
-        x = params["embed"][tokens]
-
-        def layer(x, carry):
-            p = carry["p"]
-            kp, vp = carry["k_pages"], carry["v_pages"]
-            idx_kp = carry["idx_k_pages"]
-            prev_topk = carry["prev_topk"]
-            topk_valid = carry.get("topk_valid")
-            h = rms_norm(x, p["ln1"])
-            q, kn, vn = _project_qkv(p, h, b, positions, cfg, None)
-            kp = kp.at[dest, off].set(kn.astype(kp.dtype))
-            vp = vp.at[dest, off].set(vn.astype(vp.dtype))
-            ik = dsa_mod.indexer_k(p["indexer"], h, positions,
-                                   dim=cfg.dsa.indexer_dim,
-                                   rope_base=cfg.rope_base)
-            idx_kp = idx_kp.at[dest, off].set(ik.astype(idx_kp.dtype))
-            # shard-local logical indexer view: N/S × d_i per device — the
-            # irreducible indexer read, now split across the mesh
-            idx_kc = idx_kp[gather_local].reshape(b, n_local,
-                                                  cfg.dsa.indexer_dim)
-            res = sp_dsa_mod.sp_dsa_decode_paged_local(
-                q, kp, vp, table_local, p["indexer"], h, idx_kc,
-                prev_topk, topk_valid, new_len,
-                k=kk, scale=hd ** -0.5, heads=cfg.dsa.indexer_heads,
-                dim=cfg.dsa.indexer_dim, rope_base=cfg.rope_base,
-                shard_offset=shard_offset, page_size=page_size,
-                max_candidates=cfg.dsa.max_candidates,
-                swa_window=cfg.swa_window, seq_axis=seq_axis)
-            out = {"k_pages": kp, "v_pages": vp, "idx_k_pages": idx_kp,
-                   "p": p, "prev_topk": res.new_topk}
-            if topk_valid is not None:
-                out["topk_valid"] = jnp.ones_like(topk_valid)
-                out["sel_gvr"] = res.gvr_rows
-            attn = res.attn_out.reshape(b, cfg.n_heads * hd).astype(x.dtype)
-            x = x + attn @ p["wo"]
-            h = rms_norm(x, p["ln2"])
-            if cfg.moe.num_experts:
-                m = _mlp(p, h[:, None, :], cfg, None)[:, 0]
-            else:
-                m = _mlp(p, h, cfg, None)
-            x = x + m
-            return x, out
-
-        carry_in = {"p": params["layers"],
-                    "k_pages": state["k_pages"][:, 0],
-                    "v_pages": state["v_pages"][:, 0],
-                    "idx_k_pages": state["idx_k_pages"][:, 0],
-                    "prev_topk": state["prev_topk"]}
-        if "topk_valid" in state:
-            carry_in["topk_valid"] = state["topk_valid"]
-        x, outs = jax.lax.scan(layer, x, carry_in)
-
-        new_state = dict(state)
-        for key in ("k_pages", "v_pages", "idx_k_pages"):
-            new_state[key] = outs[key][:, None]          # restore shard axis
-        new_state["prev_topk"] = outs["prev_topk"]
-        if "topk_valid" in state:
-            new_state["topk_valid"] = outs["topk_valid"]
-            new_state["sel_gvr"] = outs["sel_gvr"]
-        new_state["length"] = new_len
-
-        x = rms_norm(x, params["final_norm"])
-        head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
-        logits = (x @ head).astype(jnp.float32)
-        return logits, new_state
+        return _sp_paged_token_body(params, state, tokens, mwp, cfg,
+                                    seq_axis=seq_axis)
 
     pool_spec = P(None, seq_axis)
     st_spec = {key: (pool_spec if key in ("k_pages", "v_pages", "idx_k_pages")
@@ -886,3 +912,191 @@ def serve_step_paged(params, state, tokens, cfg: ModelConfig, *,
     head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
     logits = (x @ head).astype(jnp.float32)
     return constrain(logits, rules, "batch", "vocab"), new_state
+
+
+# --------------------------------------------------------------------------
+# Speculative verify step — draft–verify–rollback over the paged layouts
+# (DESIGN.md §spec-decode)
+# --------------------------------------------------------------------------
+#
+# One verify tick scores all d+1 draft positions of each slot through the
+# SAME per-token paged step the engine already runs, scanned inside one jit:
+# position j writes its K/V at `length + j` and attends with per-position
+# causal extent `length + j + 1`, so every position reproduces the exact
+# bits of the non-speculative step it stands in for. The GVR feedback is
+# causally extended WITHIN the tick: position j's selection warm-starts
+# position j+1 (the scan threads `prev_topk`/`topk_valid` through the
+# per-token steps), which is precisely the paper's temporal-correlation
+# signal stretched across a multi-token step ("Learn from the Past" argues
+# the correlation survives; the per-position `sel_gvr` stack lets the
+# engine measure how the hit rate degrades with draft depth).
+#
+# Greedy acceptance and EXACT rollback both happen in-graph: draft token j
+# is accepted iff it matches position j-1's argmax (and every earlier draft
+# was accepted); the final state then takes `length = L0 + a + 1` and the
+# feedback buffers (`prev_topk`/`topk_valid`/`sel_gvr`) from position a's
+# stack entry — bit-identical to what a non-speculative engine would hold
+# after emitting the same a+1 tokens. KV rows written by rejected positions
+# need no clearing (every consumer masks beyond `length`, the same
+# convention that leaves evicted dense-slot rows dirty); the HOST-side page
+# rollback (block table + ref-counts) is `PagedAdmissionCore.rewind_slot`.
+
+
+def _spec_verify_scan(step_fn, state, tokens, draft_len, max_accept,
+                      eos_id: int, base_mwp, axes, dsa_enabled: bool):
+    """Shared multi-position verify scan + greedy acceptance + exact
+    in-graph rollback (used by `serve_step_spec_paged` and, inside the
+    shard_map, by `serve_step_sp_spec_paged`).
+
+    step_fn(state, tok (B,), mwp (B,)) -> (logits (B, V), new_state) — one
+    per-token paged decode step. tokens: (B, D+1) — column 0 is the last
+    emitted token, columns 1..D the draft. draft_len: (B,) in [0, D] — rows
+    verify positions 0..draft_len (position j > draft_len is frozen: state
+    row kept, cache write redirected to the sink page). max_accept: (B,)
+    caps accepted DRAFT tokens (the engine's max_new_tokens budget).
+    eos_id: emission truncates at (and includes) the first eos argmax
+    (-1 = disabled; vocab ids are non-negative so it never matches).
+
+    Returns (out_tokens (B, D+1), accept_len (B,), logits_all (B, D+1, V),
+    sel_gvr_pos (B, D+1), new_state): `out_tokens[:, j]` is position j's
+    argmax, the engine appends columns 0..accept_len; `sel_gvr_pos` is the
+    layer-0 per-position GVR telemetry (column j valid iff j <= draft_len).
+    """
+    b, d1 = tokens.shape
+    never = jnp.int32(PAGED_NEVER_WRITE)
+    length0 = state["length"]
+
+    def body(st, inp):
+        j, tok = inp
+        live = j <= draft_len                          # (B,)
+        mwp = jnp.where(live, base_mwp, never)
+        logits, st2 = step_fn(st, tok, mwp)
+        merged = {}
+        for key, arr in st2.items():
+            ax = axes.get(key)
+            if ax is None:          # pool-global leaf: sink writes already
+                merged[key] = arr   # keep frozen rows untouched
+                continue
+            shape = [1] * arr.ndim
+            shape[ax] = b
+            merged[key] = jnp.where(live.reshape(shape), arr, st[key])
+        ys = {"logits": logits}
+        if dsa_enabled:
+            # raw (unmerged) per-position stacks: entry j is only ever
+            # selected for rows with accept_len <= draft_len, i.e. rows
+            # for which position j really executed
+            ys["prev_topk"] = st2["prev_topk"]
+            ys["topk_valid"] = st2["topk_valid"]
+            ys["sel_gvr"] = st2["sel_gvr"]
+        return merged, ys
+
+    xs = (jnp.arange(d1, dtype=jnp.int32), tokens.T)
+    end_state, ys = jax.lax.scan(body, state, xs)
+
+    logits_all = ys["logits"]                          # (D+1, B, V)
+    argmax_all = jnp.argmax(logits_all, axis=-1).astype(jnp.int32)
+    if d1 > 1:
+        # draft token j (1-based) is accepted iff it matches position
+        # j-1's argmax, it exists (j <= draft_len), and every earlier
+        # draft was accepted — the standard greedy-spec prefix rule
+        match = ((tokens[:, 1:].T == argmax_all[:-1])
+                 & (jnp.arange(1, d1, dtype=jnp.int32)[:, None]
+                    <= draft_len[None, :]))
+        raw = jnp.sum(jnp.cumprod(match.astype(jnp.int32), axis=0),
+                      axis=0).astype(jnp.int32)
+    else:
+        raw = jnp.zeros((b,), jnp.int32)
+    a = jnp.minimum(raw, jnp.maximum(max_accept, 0))
+    # emission stops at (and includes) the first eos the verify emitted
+    is_eos = argmax_all == jnp.int32(eos_id)           # (D+1, B)
+    first_eos = jnp.argmax(is_eos, axis=0).astype(jnp.int32)
+    a = jnp.where(jnp.any(is_eos, axis=0), jnp.minimum(a, first_eos), a)
+
+    new_state = dict(end_state)
+    new_state["length"] = length0 + a + 1
+    if dsa_enabled:
+        # roll the feedback back to position a's selection — exactly the
+        # buffer a non-speculative engine holds after the same tokens
+        pt = ys["prev_topk"]                           # (D+1, L, B, K)
+        gi = jnp.broadcast_to(a[None, None, :, None], (1,) + pt.shape[1:])
+        new_state["prev_topk"] = jnp.take_along_axis(pt, gi, axis=0)[0]
+        for key in ("topk_valid", "sel_gvr"):
+            stk = ys[key]                              # (D+1, L, B)
+            gi = jnp.broadcast_to(a[None, None, :], (1,) + stk.shape[1:])
+            new_state[key] = jnp.take_along_axis(stk, gi, axis=0)[0]
+        sel_pos = jnp.transpose(ys["sel_gvr"][:, 0, :])   # (B, D+1), layer 0
+    else:
+        sel_pos = jnp.zeros((b, d1), bool)
+    return (argmax_all.T, a, jnp.transpose(logits_all, (1, 0, 2)),
+            sel_pos, new_state)
+
+
+def serve_step_spec_paged(params, state, tokens, cfg: ModelConfig, *,
+                          draft_len, max_accept, eos_id: int = -1,
+                          min_write_pos: Optional[jnp.ndarray] = None,
+                          paged_attn: str = "fused",
+                          mesh=None, rules: Optional[MeshRules] = None):
+    """Speculative verify tick over the paged layout: score all d+1 draft
+    positions through `serve_step_paged` in one jitted scan, accept the
+    longest matching greedy prefix, and roll the decode state back to the
+    accepted point in-graph (see the section comment above for the exact
+    semantics and the bit-identity argument). tokens: (B, D+1) int32.
+
+    Returns (out_tokens (B, D+1), accept_len (B,), logits_all (B, D+1, V),
+    sel_gvr_pos (B, D+1), new_state).
+    """
+    b = tokens.shape[0]
+    base_mwp = (min_write_pos if min_write_pos is not None
+                else jnp.zeros((b,), jnp.int32))
+
+    def step_fn(st, tok, mwp):
+        return serve_step_paged(params, st, tok, cfg, min_write_pos=mwp,
+                                paged_attn=paged_attn, mesh=mesh, rules=rules)
+
+    return _spec_verify_scan(step_fn, state, tokens,
+                             jnp.asarray(draft_len, jnp.int32),
+                             jnp.asarray(max_accept, jnp.int32),
+                             int(eos_id), base_mwp,
+                             paged_state_batch_axes(cfg), cfg.dsa.enabled)
+
+
+def serve_step_sp_spec_paged(params, state, tokens, cfg: ModelConfig, *,
+                             mesh, draft_len, max_accept, eos_id: int = -1,
+                             min_write_pos: Optional[jnp.ndarray] = None,
+                             seq_axis: str = "seq",
+                             rules: Optional[MeshRules] = None):
+    """Sequence-sharded speculative verify tick: the same verify scan as
+    `serve_step_spec_paged`, but each per-token step is the per-device
+    sharded body (`_sp_paged_token_body`) and the whole scan — including
+    the in-graph acceptance/rollback, which is replicated arithmetic —
+    runs inside ONE shard_map over the mesh's `seq_axis`. Per position the
+    collective schedule is exactly the non-speculative sharded step's
+    (O(1) in context length), so a verify tick costs d+1 of those
+    schedules and nothing more. Bit-identical to the single-device
+    `serve_step_spec_paged` over the same logical cache content, which is
+    what pins spec == non-spec on sharded meshes (tests/test_spec.py).
+    """
+    b = tokens.shape[0]
+    _sp_paged_validate(state, cfg, mesh, seq_axis)
+    base_mwp = (min_write_pos if min_write_pos is not None
+                else jnp.zeros((b,), jnp.int32))
+    axes = sp_paged_state_batch_axes(cfg)
+
+    def body(params, state, tokens, draft_len, max_accept, base_mwp):
+        def step_fn(st, tok, mwp):
+            return _sp_paged_token_body(params, st, tok, mwp, cfg,
+                                        seq_axis=seq_axis)
+        return _spec_verify_scan(step_fn, state, tokens, draft_len,
+                                 max_accept, int(eos_id), base_mwp, axes,
+                                 cfg.dsa.enabled)
+
+    pool_spec = P(None, seq_axis)
+    st_spec = {key: (pool_spec if key in ("k_pages", "v_pages", "idx_k_pages")
+                     else P()) for key in state}
+    param_spec = jax.tree.map(lambda _: P(), params)
+    from repro.parallel.sharding import shard_map
+    fn = shard_map(body, mesh=mesh,
+                   in_specs=(param_spec, st_spec, P(), P(), P(), P()),
+                   out_specs=(P(), P(), P(), P(), st_spec), check_vma=False)
+    return fn(params, state, tokens, jnp.asarray(draft_len, jnp.int32),
+              jnp.asarray(max_accept, jnp.int32), base_mwp)

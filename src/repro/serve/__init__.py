@@ -67,6 +67,15 @@ single device can hold: per-device KV residency is max_len/S, selection
 runs SP-GVR's O(1)-collective schedule, and decode stays bit-identical
 to the single-device fused engine (DESIGN.md §sp-serving,
 tests/test_sp_engine.py).
+
+## Speculative decoding
+
+`spec_depth=d` (+ a `serve.spec` drafter) turns the decode tick into a
+d+1-position verify tick over the paged step — draft, verify, and roll
+back exactly on rejection, with the GVR feedback causally extended
+across the draft positions inside the tick. Greedy decode stays
+bit-identical to the non-speculative engine for any draft trace
+(DESIGN.md §spec-decode, tests/test_spec.py).
 """
 
 from .engine import DecodeEngine, EngineReport, Request
@@ -77,6 +86,8 @@ from .sampling import sample_token
 from .scheduler import (DECODE, DONE, PREFILL, QUEUED, FIFOScheduler,
                         LongestContextFirstScheduler, Scheduler,
                         make_scheduler)
+from .spec import (Drafter, ModelDrafter, NgramDrafter, ReplayDrafter,
+                   ScriptedDrafter)
 
 __all__ = [
     "DecodeEngine", "EngineReport", "Request",

@@ -72,6 +72,16 @@ KV layouts (`kv_layout`):
   — while per-device KV residency drops to max_len/S and per-tick
   collective traffic is independent of context length.
 
+Speculative decoding (`spec_depth=d`, paged layouts only — serve.spec,
+DESIGN.md §spec-decode): a host-side drafter proposes up to d next tokens
+per DECODE slot, the decode tick becomes ONE jitted verify tick scoring
+all d+1 positions through the paged step (GVR feedback causally extended
+inside the tick), and acceptance/rollback restore the state — length,
+feedback buffers, block tables, ref-counts — to exactly the
+non-speculative trajectory. Greedy spec decode is bit-identical to
+non-spec decode for every accept/reject trace (tests/test_spec.py);
+sampled requests verify at depth 0 (greedy-only speculation).
+
 Bit-exactness: every per-slot computation in `serve_step` is row-parallel
 (attention, norms, projections act per batch row), so a request decoded in
 a busy pool produces bit-identical tokens to the same request decoded
@@ -107,6 +117,11 @@ class Request:                         # queue must never compare ndarray fields
     temperature: float = 0.0
     top_p: float = 1.0
     seed: Optional[int] = None         # PRNG seed (default: uid)
+    # speculative decoding: per-request draft-depth cap, clamped to the
+    # engine's (static) spec_depth; None = use the engine's. Sampled
+    # requests (temperature > 0) always verify with depth 0 — greedy-only
+    # speculation (serve.spec package doc).
+    spec_depth: Optional[int] = None
     # lifecycle bookkeeping (engine-owned)
     phase: str = QUEUED
     slot: Optional[int] = None
@@ -128,6 +143,9 @@ class Request:                         # queue must never compare ndarray fields
         if not (0.0 < self.top_p <= 1.0):
             raise ValueError(f"request {self.uid}: top_p must be in (0, 1], "
                              f"got {self.top_p}")
+        if self.spec_depth is not None and self.spec_depth < 0:
+            raise ValueError(f"request {self.uid}: spec_depth must be >= 0, "
+                             f"got {self.spec_depth}")
 
 
 @dataclasses.dataclass
@@ -151,6 +169,23 @@ class EngineReport:
     * `preemptions` — slots evicted back to the queue under page pressure.
     * `prefix_hit_tokens` — prompt tokens served from the prefix cache
       instead of being streamed (paged layout only).
+    * `spec_ticks` / `spec_drafted` / `spec_accepted` — speculative-mode
+      telemetry (spec_depth > 0 only): per-SLOT verify passes that
+      carried at least one draft token (one engine tick verifying two
+      drafting slots counts 2 — the unit the drafted/accepted totals
+      amortize over), draft tokens proposed, draft tokens accepted.
+      `spec_acceptance_rate` (property) = accepted / drafted. Method-log
+      entries (and hence `gvr_hit_rate`) count ACCEPTED positions only —
+      the positions that correspond one-to-one to non-speculative ticks —
+      which is what keeps the report bit-comparable to a non-spec run;
+      the wasted (rejected) verify positions are visible as
+      `spec_drafted - spec_accepted`.
+    * `gvr_hit_rate_by_draft_pos` — per verify-tick position j (0 = the
+      non-speculative input token, j >= 1 = draft depth j), the fraction
+      of EXECUTED positions the GVR path served. Position j warms from
+      position j-1's selection inside the tick, so this list is the
+      paper's "how does the prev-Top-K hit rate degrade with draft depth"
+      measurement (BENCH_spec.json records it per depth).
     * `peak_page_utilization` — max utilization of the MOST-PRESSURED
       pool over the window's ticks (the single pool, or the hottest
       shard's pool under `seq_shards` — an aggregate ratio could read
@@ -168,10 +203,20 @@ class EngineReport:
     preemptions: int = 0
     prefix_hit_tokens: int = 0                     # prompt tokens not streamed
     peak_page_utilization: float = 0.0             # paged layout only
+    spec_ticks: int = 0                            # slot verify passes w/ drafts
+    spec_drafted: int = 0                          # draft tokens proposed
+    spec_accepted: int = 0                         # draft tokens accepted
+    gvr_hit_rate_by_draft_pos: List[float] = dataclasses.field(
+        default_factory=list)
 
     @property
     def tokens_per_s(self) -> float:
         return self.decoded_tokens / self.wall_s if self.wall_s > 0 else 0.0
+
+    @property
+    def spec_acceptance_rate(self) -> float:
+        return (self.spec_accepted / self.spec_drafted
+                if self.spec_drafted else 0.0)
 
     @property
     def gvr_hit_rate(self) -> float:
@@ -198,12 +243,20 @@ class DecodeEngine:
                  eos_id: Optional[int] = None, record_logits: bool = False,
                  kv_layout: str = "dense", page_size: int = 16,
                  num_pages: Optional[int] = None, prefix_caching: bool = True,
-                 paged_attn: str = "fused", seq_shards: int = 1, mesh=None):
+                 paged_attn: str = "fused", seq_shards: int = 1, mesh=None,
+                 spec_depth: int = 0, drafter=None):
         if kv_layout not in ("dense", "paged"):
             raise ValueError(f"unknown kv_layout {kv_layout!r}")
         if paged_attn not in ("fused", "gather"):
             raise ValueError(f"unknown paged_attn {paged_attn!r} "
                              f"(expected 'fused' or 'gather')")
+        if spec_depth < 0:
+            raise ValueError(f"spec_depth must be >= 0, got {spec_depth}")
+        if spec_depth > 0 and kv_layout != "paged":
+            raise ValueError(
+                "spec_depth > 0 requires kv_layout='paged': the verify "
+                "tick runs through the paged step and its rollback is the "
+                "page-cursor rewind (serve.spec)")
         self.model = model
         self.params = params
         self.cfg = model.cfg
@@ -305,6 +358,21 @@ class DecodeEngine:
             self.kv = None
             self.state = model.init_decode_state(self.num_slots, self.max_len)
 
+        # speculative decoding (serve.spec): the drafter proposes up to
+        # spec_depth tokens per DECODE slot per tick; the verify tick
+        # scores them all in one jitted scan. Default drafter: self-
+        # drafting n-gram lookup (no second model).
+        self.spec_depth = int(spec_depth)
+        if drafter is None and self.spec_depth > 0:
+            from .spec import NgramDrafter
+            drafter = NgramDrafter()
+        self.drafter = drafter
+        self.spec_ticks = 0
+        self.spec_drafted = 0
+        self.spec_accepted = 0
+        self._spec_pos_hits = np.zeros((self.spec_depth + 1,), np.int64)
+        self._spec_pos_total = np.zeros((self.spec_depth + 1,), np.int64)
+
         self.slots: List[Optional[Request]] = [None] * self.num_slots
         self.tick_count = 0
         self.decoded_tokens = 0
@@ -333,6 +401,8 @@ class DecodeEngine:
 
         self._tick_fn = jax.jit(self._tick_impl)
         self._prefill_fn = jax.jit(self._prefill_impl)
+        self._spec_fn = (jax.jit(self._tick_spec_impl)
+                         if self.spec_depth > 0 else None)
 
     # ---- jitted kernels -------------------------------------------------
 
@@ -348,6 +418,22 @@ class DecodeEngine:
                                                paged_attn=self.paged_attn)
         return self.model.serve_step(params, state, tokens)
 
+    def _merge_active(self, new_state, state, active):
+        """Keep `new_state` only for active rows; pool-global leaves (the
+        paged page arrays — absent from the axes map) pass through whole,
+        their inactive-row writes having been redirected to the sink page
+        inside the step."""
+        merged = {}
+        for key, arr in new_state.items():
+            ax = self._axes.get(key)
+            if ax is None:
+                merged[key] = arr
+                continue
+            shape = [1] * arr.ndim
+            shape[ax] = self.num_slots
+            merged[key] = jnp.where(active.reshape(shape), arr, state[key])
+        return merged
+
     def _tick_impl(self, params, state, tokens, active):
         """One pool-wide decode step; inactive rows keep their old state.
         Paged layout: inactive rows additionally redirect their cache write
@@ -355,17 +441,32 @@ class DecodeEngine:
         mwp = (jnp.where(active, jnp.int32(0), jnp.int32(PAGED_NEVER_WRITE))
                if self.kv is not None else None)
         logits, new_state = self._serve_step(params, state, tokens, mwp)
-        merged = {}
-        for key, arr in new_state.items():
-            ax = self._axes.get(key)
-            if ax is None:            # pool-global leaf (paged page arrays)
-                merged[key] = arr
-                continue
-            shape = [1] * arr.ndim
-            shape[ax] = self.num_slots
-            merged[key] = jnp.where(active.reshape(shape), arr, state[key])
+        merged = self._merge_active(new_state, state, active)
         next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
         return merged, next_tok, logits
+
+    def _tick_spec_impl(self, params, state, tokens, active, draft_len,
+                        max_accept):
+        """One speculative verify tick over the pool: all d+1 draft
+        positions of every active DECODE row scored in one scan of the
+        paged step, with in-graph greedy acceptance and exact rollback of
+        length/feedback to the accepted position (serve.spec; the model
+        side is transformer.serve_step_spec_paged). Inactive rows keep
+        their state bit-for-bit, exactly as in `_tick_impl`."""
+        mwp = jnp.where(active, jnp.int32(0), jnp.int32(PAGED_NEVER_WRITE))
+        eos = self.eos_id if self.eos_id is not None else -1
+        if self.seq_shards > 1:
+            out = self.model.serve_step_sp_spec_paged(
+                params, state, tokens, mesh=self.mesh, draft_len=draft_len,
+                max_accept=max_accept, eos_id=eos, min_write_pos=mwp)
+        else:
+            out = self.model.serve_step_spec_paged(
+                params, state, tokens, draft_len=draft_len,
+                max_accept=max_accept, eos_id=eos, min_write_pos=mwp,
+                paged_attn=self.paged_attn)
+        out_tokens, accept_len, logits_all, sel_pos, new_state = out
+        merged = self._merge_active(new_state, state, active)
+        return merged, out_tokens, accept_len, logits_all, sel_pos
 
     def _slice_slot(self, state, slot):
         """Batch-1 view of one slot; pool-global leaves pass through whole
@@ -477,16 +578,29 @@ class DecodeEngine:
                     src, dst = cow
                     self.state[key] = arr.at[:, dst].set(arr[:, src])
 
-    def _preempt_victim(self, exclude: Optional[int] = None) -> Optional[int]:
+    def _preempt_victim(self, exclude: Optional[int] = None,
+                        shard: Optional[int] = None) -> Optional[int]:
         """Lowest-priority victim under page pressure. PREFILL slots first
         (most remaining prompt tokens = least sunk cost, ties toward the
         latest admission); if every other slot is already decoding, fall
         back to the DECODE slot with the fewest generated tokens — losing a
         nearly-done request to save a barely-started one would waste the
-        most work."""
+        most work.
+
+        Shard-aware (sequence-sharded layout): when the exhaustion names a
+        pressured shard, only slots actually HOLDING pages in that shard
+        are candidates — evicting a slot whose pages all live in other
+        shards can never free a page where the allocation failed, so the
+        old shard-blind order could burn a victim's work for nothing
+        (regression-pinned in tests/test_sp_engine.py). With no holder
+        left, the caller's give-up path reports the per-shard squeeze."""
+        def holds(s):
+            return shard is None or self.kv.pages_in_shard(s, shard) > 0
         best, best_key = None, None
         for s, req in enumerate(self.slots):
             if req is None or req.phase != PREFILL or s == exclude:
+                continue
+            if not holds(s):
                 continue
             key = (len(req.prompt) - req.prefill_pos, req.admitted_at)
             if best_key is None or key > best_key:
@@ -495,6 +609,8 @@ class DecodeEngine:
             return best
         for s, req in enumerate(self.slots):
             if req is None or req.phase != DECODE or s == exclude:
+                continue
+            if not holds(s):
                 continue
             key = (-len(req.generated), req.admitted_at)
             if best_key is None or key > best_key:
@@ -525,6 +641,10 @@ class DecodeEngine:
         req.preemptions += 1
         self.slots[victim] = None
         self.preemptions += 1
+        if self.drafter is not None:
+            # stateful drafters resync from scratch on the replay — the
+            # same drafts re-derive deterministically
+            self.drafter.release(req.uid)
         self.scheduler.requeue(req)
 
     def _ensure_decode_page(self, slot: int, pos: int) -> None:
@@ -541,16 +661,21 @@ class DecodeEngine:
                     self._copy_page(cow)
                 return
             except PoolExhausted as exc:
-                victim = self._preempt_victim(exclude=slot)
+                victim = self._preempt_victim(exclude=slot,
+                                              shard=getattr(exc, "shard",
+                                                            None))
                 if victim is None:
                     # the original message names the binding pool (the
                     # sharded manager's says WHICH shard) — the aggregate
-                    # page count would misstate a per-shard squeeze
+                    # page count would misstate a per-shard squeeze. Under
+                    # the shard-aware victim filter "nothing left" means
+                    # no other slot holds pages in THAT shard, so slot
+                    # `slot`'s own span demand is what exceeds it.
                     raise RuntimeError(
                         f"page pool exhausted ({exc}) with nothing left "
                         f"to preempt: slot {slot} alone needs more pages "
-                        f"than the pool holds — increase num_pages") \
-                        from None
+                        f"than the binding pool holds — increase "
+                        f"num_pages") from None
                 self._preempt(victim)
 
     def _admit(self) -> None:
@@ -627,7 +752,107 @@ class DecodeEngine:
                 self.decoded_tokens += 1
                 self._maybe_finish(req.slot)
 
+    # ---- speculative decode tick (serve.spec) ---------------------------
+
+    def _request_draft(self, req: Request) -> List[int]:
+        """Host-side draft for one DECODE slot, clamped to the engine's
+        static depth, the request's own cap, its remaining max_new budget,
+        and greedy-only speculation (sampled requests verify depth 0)."""
+        depth = (self.spec_depth if req.spec_depth is None
+                 else min(req.spec_depth, self.spec_depth))
+        if req.temperature > 0.0:
+            depth = 0
+        depth = min(depth, req.max_new_tokens - len(req.generated) - 1)
+        if depth <= 0:
+            return []
+        draft = self.drafter.draft(req, depth)
+        return [int(t) for t in draft][:depth]
+
+    def _decode_tick_spec(self) -> None:
+        """Speculative variant of `_decode_tick`: draft per slot, map the
+        verify window's pages (up to d+1 write positions ahead — pool
+        pressure may preempt here, exactly as in the non-spec tick, just
+        earlier), run ONE verify tick, append the accepted tokens, and
+        rewind each slot's page cursor to the accepted prefix so block
+        tables and ref-counts end bit-identical to non-speculative decode
+        (DESIGN.md §spec-decode)."""
+        d1 = self.spec_depth + 1
+        drafts: Dict[int, List[int]] = {}
+        for s, req in enumerate(self.slots):
+            if req is None or req.phase != DECODE:
+                continue
+            drafts[s] = self._request_draft(req)
+        for s in list(drafts):
+            req = self.slots[s]
+            if req is None or req.phase != DECODE:
+                drafts.pop(s)          # preempted while mapping another slot
+                continue
+            pos0 = len(req.prompt) + len(req.generated) - 1
+            for pos in range(pos0, pos0 + len(drafts[s]) + 1):
+                self._ensure_decode_page(s, pos)
+        self._push_page_table()
+        active = np.array([r is not None and r.phase == DECODE
+                           for r in self.slots])
+        if not active.any():
+            return
+        tokens = np.zeros((self.num_slots, d1), np.int32)
+        draft_len = np.zeros((self.num_slots,), np.int32)
+        max_accept = np.zeros((self.num_slots,), np.int32)
+        for s, req in enumerate(self.slots):
+            if not active[s]:
+                continue
+            draft = drafts.get(s, [])
+            tokens[s, 0] = req.generated[-1]
+            tokens[s, 1:1 + len(draft)] = draft
+            draft_len[s] = len(draft)
+            max_accept[s] = req.max_new_tokens - len(req.generated) - 1
+        self.state, out_tokens, accept_len, logits_all, sel_pos = \
+            self._spec_fn(self.params, self.state, jnp.asarray(tokens),
+                          jnp.asarray(active), jnp.asarray(draft_len),
+                          jnp.asarray(max_accept))
+        out_tokens = np.asarray(out_tokens)
+        accept_len = np.asarray(accept_len)
+        sel_pos = np.asarray(sel_pos)
+        logits_np = np.asarray(logits_all) if self.record_logits else None
+        for s, req in enumerate(self.slots):
+            if not active[s]:
+                continue
+            a = int(accept_len[s])
+            dlen = int(draft_len[s])
+            for p in range(a + 1):
+                # accepted positions map one-to-one to non-spec ticks:
+                # log the selector path that really served each
+                self._log(req, self._method_name(bool(sel_pos[s, p])))
+                if p == 0:
+                    # position 0 is the ordinary next-token step; sampled
+                    # requests (always depth 0) draw from its logits
+                    tok = self._next_token(req, int(out_tokens[s, 0]),
+                                           logits_all[s, 0])
+                else:
+                    tok = int(out_tokens[s, p])
+                req.generated.append(tok)
+                if self.record_logits:
+                    # copy: a view would pin the whole per-tick
+                    # (num_slots, d+1, vocab) block for the log's lifetime
+                    req.logits_log.append(logits_np[s, p].copy())
+                self.decoded_tokens += 1
+            # telemetry: every EXECUTED position (accepted or wasted)
+            if dlen > 0:
+                self.spec_ticks += 1
+                self.spec_drafted += dlen
+                self.spec_accepted += a
+            for j in range(dlen + 1):
+                self._spec_pos_total[j] += 1
+                self._spec_pos_hits[j] += bool(sel_pos[s, j])
+            # page-cursor rewind: drop pages mapped past the accepted
+            # prefix — rollback exactness vs non-speculative decode
+            self.kv.rewind_slot(s, int(len(req.prompt) + len(req.generated)
+                                       - 1))
+            self._maybe_finish(s)
+
     def _decode_tick(self) -> None:
+        if self.spec_depth > 0:
+            return self._decode_tick_spec()
         if self.kv is not None:
             # map (and COW-protect) each DECODE slot's write page up front;
             # pool pressure may preempt PREFILL slots here
@@ -673,6 +898,8 @@ class DecodeEngine:
                 self.kv.release_slot(slot)
             self.state = self.pool.evict(self.state, slot)
             self.slots[slot] = None
+            if self.drafter is not None:
+                self.drafter.release(req.uid)
             self.completed.append(req)
 
     def tick(self) -> None:
@@ -716,6 +943,9 @@ class DecodeEngine:
         start_completed = len(self.completed)
         start_preempt = self.preemptions
         start_skipped = self.kv.skipped_tokens if self.kv is not None else 0
+        start_spec = (self.spec_ticks, self.spec_drafted, self.spec_accepted)
+        start_pos_hits = self._spec_pos_hits.copy()
+        start_pos_total = self._spec_pos_total.copy()
         while not self.idle() and self.tick_count - start_tick < max_ticks:
             self.tick()
         wall = time.perf_counter() - t0
@@ -728,6 +958,8 @@ class DecodeEngine:
                     combined[method] = combined.get(method, 0) + 1
                     bucket = by_phase.setdefault(phase, {})
                     bucket[method] = bucket.get(method, 0) + 1
+        pos_hits = self._spec_pos_hits - start_pos_hits
+        pos_total = self._spec_pos_total - start_pos_total
         return EngineReport(
             ticks=self.tick_count - start_tick, wall_s=wall,
             decoded_tokens=self.decoded_tokens - start_decoded,
@@ -740,4 +972,10 @@ class DecodeEngine:
             prefix_hit_tokens=(self.kv.skipped_tokens - start_skipped
                                if self.kv is not None else 0),
             peak_page_utilization=(self.peak_pool_util
-                                   if self.kv is not None else 0.0))
+                                   if self.kv is not None else 0.0),
+            spec_ticks=self.spec_ticks - start_spec[0],
+            spec_drafted=self.spec_drafted - start_spec[1],
+            spec_accepted=self.spec_accepted - start_spec[2],
+            gvr_hit_rate_by_draft_pos=[
+                float(h) / float(t) if t else 0.0
+                for h, t in zip(pos_hits, pos_total)])

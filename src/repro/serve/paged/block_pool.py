@@ -23,7 +23,17 @@ import numpy as np
 class PoolExhausted(RuntimeError):
     """No free page available. Callers fail over (queue the admission,
     reclaim prefix-cache pages, or preempt a PREFILL slot) — they do not
-    treat this as fatal."""
+    treat this as fatal.
+
+    `shard` names the BINDING pool under the sequence-sharded layout (the
+    shard whose span demand could not be met); None for the single-pool
+    layout. The engine's preemption victim choice uses it to prefer
+    victims that actually hold pages in the pressured shard — evicting a
+    slot whose pages all live elsewhere can never relieve the pressure."""
+
+    def __init__(self, *args, shard=None):
+        super().__init__(*args)
+        self.shard = shard
 
 
 class BlockPool:

@@ -28,6 +28,15 @@ class BlockTable:
     def map(self, logical_page: int, phys_page: int) -> None:
         self._pages[logical_page] = phys_page
 
+    def unmap(self, logical_page: int) -> int:
+        """Drop one mapping; returns the physical id that was mapped (the
+        caller decrefs it), or -1 when it was already unmapped. Used by the
+        speculative-decode rollback (`rewind_slot`) to return pages mapped
+        ahead of a rejected draft."""
+        phys = int(self._pages[logical_page])
+        self._pages[logical_page] = -1
+        return phys
+
     def mapped(self) -> List[int]:
         """Physical ids of all mapped logical pages, in logical order."""
         return [int(p) for p in self._pages[self._pages >= 0]]

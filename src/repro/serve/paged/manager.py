@@ -29,7 +29,116 @@ class AdmitPlan:
     shared_pages: int    # pages acquired from the prefix cache
 
 
-class PagedKVManager:
+class PagedAdmissionCore:
+    """Owner-routed admission core shared by `PagedKVManager` and
+    `ShardedPagedKVManager` (ROADMAP open item: the doomed-admission fix
+    previously had to land in both managers because each carried its own
+    copy of the probe→match→map sequence; the regressions in
+    tests/test_paged.py pin both layouts against this one implementation).
+
+    The core is written against per-shard primitives; the single-pool
+    manager is the trivial routing (one shard, every logical page owned by
+    shard 0). Subclass contract:
+
+    * `owner(lp)` — owning shard of logical page `lp`.
+    * `_num_shards` — shard count (1 for the single pool).
+    * `_page_demand(num_pages, start=0)` — per-shard count of logical
+      pages in [start, num_pages).
+    * `_shard_capacity(shard, exclude=())` — pages obtainable from that
+      shard without preemption (free + cache-reclaimable; `exclude` drops
+      handles the caller plans to acquire as shared).
+    * `_cache_view` — the pool facade the (shard-agnostic) `PrefixCache`
+      routes incref/decref through; its handles are whatever the cache
+      stores (raw ints single-pool, `(shard, page)` sharded).
+    * `_handle_page(lp, handle)` — local physical id of a cache handle
+      for logical page `lp` (asserts the owner matches, sharded).
+    * `_alloc_page(shard)` — allocate from that shard's pool (with the
+      shard-filtered prefix-cache reclaim fallback); raises
+      `PoolExhausted` carrying the binding shard.
+    * `_decref_page(shard, page)` — drop one ref against the owner pool.
+
+    `admit` and the speculative-decode `rewind_slot` live here exactly
+    once; everything else stays layout-specific.
+    """
+
+    def admit(self, slot: int, prompt) -> Optional[AdmitPlan]:
+        """Plan a request's pages: acquire the longest shared prefix chain,
+        allocate the rest of the prompt's pages from their owner shards,
+        map them. Returns None — with NOTHING acquired — when any owner
+        shard (even after reclaiming its cold cached pages) cannot hold its
+        span of the non-shared pages: the engine leaves the request queued
+        instead of raising (fail-over to queueing)."""
+        plen = len(prompt)
+        table = self.tables[slot]
+        assert not table.mapped(), f"slot {slot} admitted while mapped"
+        chain = (chain_hashes(prompt, self.page_size)
+                 if self.prefix is not None else [])
+        n_prompt_pages = -(-plen // self.page_size)
+        # side-effect-free capacity check first: a request that retries
+        # every tick under page pressure must not touch LRU order or stats.
+        # The hit pages are excluded from the reclaimable budget — they are
+        # acquired, not reclaimed, so counting them would let a doomed
+        # admission pass this check and reach the match/rollback path (with
+        # its telemetry/LRU side effects) every tick it stays queued
+        hit_pages = (self.prefix.probe_pages(chain)
+                     if self.prefix is not None else [])
+        need = self._page_demand(n_prompt_pages, start=len(hit_pages))
+        if any(need[s] > self._shard_capacity(s, exclude=hit_pages)
+               for s in range(self._num_shards)):
+            return None
+        shared = (self.prefix.match(self._cache_view, chain)
+                  if self.prefix is not None else [])
+        need = self._page_demand(n_prompt_pages, start=len(shared))
+        if any(need[s] > self._shard_capacity(s)
+               for s in range(self._num_shards)):    # unreachable in the
+            for handle in shared:                    # single-threaded engine,
+                self._cache_view.decref(handle)      # kept as a guard
+            return None
+        for i, handle in enumerate(shared):
+            table.map(i, self._handle_page(i, handle))
+        for i in range(len(shared), n_prompt_pages):
+            table.map(i, self._alloc_page(self.owner(i)))
+        self.dirty = True
+        materialized = len(shared) * self.page_size
+        # the last prompt token always streams: its step produces the
+        # logits that seed generation (and re-arms the feedback buffer)
+        skip = min(materialized, plen - 1)
+        self.skipped_tokens += skip
+        return AdmitPlan(skip_len=skip, materialized=materialized,
+                         shared_pages=len(shared))
+
+    def rewind_slot(self, slot: int, keep_len: int) -> int:
+        """Speculative-decode rollback hook: unmap (and decref against the
+        owner shards) every logical page of the slot that lies WHOLLY
+        beyond the accepted prefix's first `keep_len` tokens. After a
+        verify tick that accepted fewer tokens than it mapped pages for,
+        this restores the block table and ref-counts to exactly what
+        non-speculative decode would hold at the same length — the
+        rollback-exactness contract (DESIGN.md §spec-decode). Returns the
+        number of pages freed."""
+        first_free = -(-int(keep_len) // self.page_size)
+        row = self.tables[slot].row
+        freed = 0
+        for rel in np.nonzero(row[first_free:] >= 0)[0]:
+            lp = int(rel) + first_free
+            self._decref_page(self.owner(lp), self.tables[slot].unmap(lp))
+            freed += 1
+        if freed:
+            self.dirty = True
+        return freed
+
+    def pages_in_shard(self, slot: int, shard: Optional[int]) -> int:
+        """Mapped pages of `slot` owned by `shard` (all pages when None) —
+        the engine's shard-aware preemption victim signal: a victim holding
+        no pages in the pressured shard cannot relieve it."""
+        row = self.tables[slot].row
+        if shard is None:
+            return int((row >= 0).sum())
+        return sum(1 for lp in np.nonzero(row >= 0)[0]
+                   if self.owner(int(lp)) == shard)
+
+
+class PagedKVManager(PagedAdmissionCore):
     """Page bookkeeping for one engine's slot pool (see module docstring)."""
 
     def __init__(self, *, num_slots: int, max_len: int, page_size: int,
@@ -69,50 +178,33 @@ class PagedKVManager:
             cap += self.prefix.reclaimable(self.pool, exclude)
         return cap
 
-    # ---- admission ------------------------------------------------------
+    # ---- admission-core primitives (PagedAdmissionCore contract) --------
+    # `admit` / `rewind_slot` themselves live on the shared base class —
+    # this manager is the trivial routing: one shard owning every page.
 
-    def admit(self, slot: int, prompt) -> Optional[AdmitPlan]:
-        """Plan a request's pages: acquire the longest shared prefix chain,
-        allocate the rest of the prompt's pages, map them. Returns None —
-        with NOTHING acquired — when the pool (even after reclaiming cold
-        cached pages) cannot hold the non-shared pages: the engine leaves
-        the request queued instead of raising (fail-over to queueing)."""
-        plen = len(prompt)
-        table = self.tables[slot]
-        assert not table.mapped(), f"slot {slot} admitted while mapped"
-        chain = (chain_hashes(prompt, self.page_size)
-                 if self.prefix is not None else [])
-        n_prompt_pages = -(-plen // self.page_size)
-        # side-effect-free capacity check first: a request that retries
-        # every tick under page pressure must not touch LRU order or stats.
-        # The hit pages are excluded from the reclaimable budget — they are
-        # acquired, not reclaimed, so counting them would let a doomed
-        # admission pass this check and reach the match/rollback path (with
-        # its telemetry/LRU side effects) every tick it stays queued
-        hit_pages = (self.prefix.probe_pages(chain)
-                     if self.prefix is not None else [])
-        if self._free_capacity(exclude=hit_pages) < \
-                n_prompt_pages - len(hit_pages):
-            return None
-        shared = (self.prefix.match(self.pool, chain)
-                  if self.prefix is not None else [])
-        need = n_prompt_pages - len(shared)
-        if self._free_capacity() < need:            # unreachable in the
-            for page in shared:                     # single-threaded engine,
-                self.pool.decref(page)              # kept as a guard
-            return None
-        for i, page in enumerate(shared):
-            table.map(i, page)
-        for i in range(len(shared), n_prompt_pages):
-            table.map(i, self._alloc())
-        self.dirty = True
-        materialized = len(shared) * self.page_size
-        # the last prompt token always streams: its step produces the
-        # logits that seed generation (and re-arms the feedback buffer)
-        skip = min(materialized, plen - 1)
-        self.skipped_tokens += skip
-        return AdmitPlan(skip_len=skip, materialized=materialized,
-                         shared_pages=len(shared))
+    _num_shards = 1
+
+    def owner(self, logical_page: int) -> int:
+        return 0
+
+    def _page_demand(self, num_pages: int, start: int = 0) -> List[int]:
+        return [max(0, int(num_pages) - int(start))]
+
+    def _shard_capacity(self, shard: int, exclude=()) -> int:
+        return self._free_capacity(exclude)
+
+    @property
+    def _cache_view(self):
+        return self.pool                  # cache handles ARE pool page ids
+
+    def _handle_page(self, logical_page: int, handle: int) -> int:
+        return handle
+
+    def _alloc_page(self, shard: int) -> int:
+        return self._alloc()
+
+    def _decref_page(self, shard: int, page: int) -> None:
+        self.pool.decref(page)
 
     # ---- steady-state paging --------------------------------------------
 

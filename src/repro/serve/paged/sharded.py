@@ -36,7 +36,7 @@ import numpy as np
 
 from .block_pool import BlockPool, PoolExhausted
 from .block_table import BlockTable
-from .manager import AdmitPlan
+from .manager import AdmitPlan, PagedAdmissionCore
 from .prefix_cache import PrefixCache, chain_hashes
 
 
@@ -73,10 +73,12 @@ class _RoutedPoolView:
         self._pools[handle[0]].decref(handle[1])
 
 
-class ShardedPagedKVManager:
+class ShardedPagedKVManager(PagedAdmissionCore):
     """Per-shard page bookkeeping for the sequence-sharded engine (see
     module docstring). API-compatible with `PagedKVManager` where the
-    engine is layout-blind; copy-on-write descriptors gain a shard field
+    engine is layout-blind — `admit`/`rewind_slot` are literally the SAME
+    implementation (`manager.PagedAdmissionCore`), routed here through the
+    per-shard primitives; copy-on-write descriptors gain a shard field
     (`ensure_writable` returns `(shard, src, dst)`)."""
 
     def __init__(self, *, num_slots: int, max_len: int, page_size: int,
@@ -121,9 +123,11 @@ class ShardedPagedKVManager:
             if (self.prefix is not None
                     and self.prefix.reclaim(self._shard_view(shard), 1)):
                 return self.pools[shard].alloc()
+            # carry the binding shard: the engine's preemption victim
+            # choice prefers victims actually holding pages in it
             raise PoolExhausted(
                 f"shard {shard}: all {self.num_pages_per_shard} pages in "
-                f"use (page_size={self.page_size})") from None
+                f"use (page_size={self.page_size})", shard=shard) from None
 
     def _free_capacity(self, shard: int, exclude=()) -> int:
         """`exclude` drops (shard, page) handles the caller plans to
@@ -163,48 +167,33 @@ class ShardedPagedKVManager:
                 f"but each shard's pool holds {self.num_pages_per_shard} "
                 f"(per-device KV budget)")
 
-    # ---- admission ------------------------------------------------------
+    # ---- admission-core primitives (PagedAdmissionCore contract) --------
+    # `admit` / `rewind_slot` live on the shared base class; these hooks
+    # route each logical page to its owner shard's pool and express cache
+    # handles as composite (shard, local_page) pairs.
 
-    def admit(self, slot: int, prompt) -> Optional[AdmitPlan]:
-        """Plan a request's pages across the shard pools. Mirrors
-        `PagedKVManager.admit` (longest shared prefix chain, side-effect-
-        free capacity probe first, None with nothing acquired on
-        page pressure) with the capacity check and allocations routed
-        per shard."""
-        plen = len(prompt)
-        table = self.tables[slot]
-        assert not table.mapped(), f"slot {slot} admitted while mapped"
-        chain = (chain_hashes(prompt, self.page_size)
-                 if self.prefix is not None else [])
-        n_prompt_pages = -(-plen // self.page_size)
-        # side-effect-free pre-check; hit pages are acquired, not
-        # reclaimed, so they are excluded from the reclaimable budget
-        # (see PagedKVManager.admit — same contract, per shard here)
-        hit_pages = (self.prefix.probe_pages(chain)
-                     if self.prefix is not None else [])
-        need = self._page_demand(n_prompt_pages, start=len(hit_pages))
-        if any(need[s] > self._free_capacity(s, exclude=hit_pages)
-               for s in range(self.seq_shards)):
-            return None
-        shared = (self.prefix.match(self._view, chain)
-                  if self.prefix is not None else [])
-        need = self._page_demand(n_prompt_pages, start=len(shared))
-        if any(need[s] > self._free_capacity(s)
-               for s in range(self.seq_shards)):    # unreachable single-
-            for handle in shared:                   # threaded; kept as guard
-                self._view.decref(handle)
-            return None
-        for i, (shard, page) in enumerate(shared):
-            assert shard == self.owner(i), (i, shard)
-            table.map(i, page)
-        for i in range(len(shared), n_prompt_pages):
-            table.map(i, self._alloc(self.owner(i)))
-        self.dirty = True
-        materialized = len(shared) * self.page_size
-        skip = min(materialized, plen - 1)
-        self.skipped_tokens += skip
-        return AdmitPlan(skip_len=skip, materialized=materialized,
-                         shared_pages=len(shared))
+    @property
+    def _num_shards(self) -> int:
+        return self.seq_shards
+
+    def _shard_capacity(self, shard: int, exclude=()) -> int:
+        return self._free_capacity(shard, exclude)
+
+    @property
+    def _cache_view(self):
+        return self._view
+
+    def _handle_page(self, logical_page: int,
+                     handle: Tuple[int, int]) -> int:
+        shard, page = handle
+        assert shard == self.owner(logical_page), (logical_page, shard)
+        return page
+
+    def _alloc_page(self, shard: int) -> int:
+        return self._alloc(shard)
+
+    def _decref_page(self, shard: int, page: int) -> None:
+        self.pools[shard].decref(page)
 
     # ---- steady-state paging --------------------------------------------
 

@@ -1,0 +1,54 @@
+"""Speculative decoding over the paged GVR serving stack (draft–verify–
+rollback; DESIGN.md §spec-decode).
+
+The paper validates GVR under speculative decoding ("smaller but still
+positive gains under speculative decoding"): a draft–verify loop turns the
+one-token-per-tick decode into a d+1-position **verify tick**, and the
+question it raises for GVR is whether the prev-Top-K temporal signal
+survives multi-token steps — "Learn from the Past" argues it does, Vegas
+shows draft–verify composes naturally with sparse attention. This
+subsystem makes the question measurable inside the serving engine:
+
+* **Drafters** (`spec.drafter`) propose up to `spec_depth` next tokens per
+  DECODE slot from host-side state: `NgramDrafter` self-drafts by suffix
+  lookup over the slot's own emitted tokens (prompt-lookup decoding — no
+  second model), `ModelDrafter` wraps a small registry config as a classic
+  draft model, `ReplayDrafter`/`ScriptedDrafter` are the measurement /
+  testing harness forms (oracle replay = the 100%-acceptance upper bound;
+  scripts = arbitrary accept/reject traces for the rollback proofs).
+* The **verify tick** (`models.transformer.serve_step_spec_paged`, sharded
+  form `serve_step_sp_spec_paged`) scores all d+1 positions in ONE jitted
+  scan of the existing fused paged sparse-attention step. GVR feedback is
+  causally extended within the tick — position j's Top-K selection
+  warm-starts position j+1 — so each position reproduces the exact bits of
+  the non-speculative step it stands in for.
+* **Rollback** is exact on both sides of the host/device line: the
+  in-graph acceptance rolls `length` and the feedback buffers
+  (`prev_topk`/`topk_valid`/`sel_gvr`) back to the accepted position, and
+  the engine's page rollback (`serve.paged.PagedAdmissionCore.rewind_slot`)
+  returns the block table and ref-counts to exactly the non-speculative
+  state. tests/test_spec.py pins the whole contract: for greedy decoding,
+  ANY accept/reject trace replays bit-identically to non-speculative
+  decode — tokens, method log, GVR hit rate, block tables, ref-counts —
+  across page sizes, draft depths, warm/cold rows, and sequence shards.
+
+Scope notes: speculation applies to greedy requests only (sampled
+requests verify with draft_len 0, i.e. run the ordinary one-token step —
+distribution-preserving rejection sampling is future work), and the
+acceptance-invariance claim is stated for pools with headroom: the engine
+maps up to d+1 write positions ahead per verify tick, so under page
+pressure a speculative engine may preempt earlier than a non-speculative
+one (the rollback itself stays exact either way).
+
+Telemetry: `EngineReport.spec_drafted` / `spec_accepted` /
+`spec_acceptance_rate` and `gvr_hit_rate_by_draft_pos` — the fraction of
+verify positions at draft depth j that the GVR path served, the paper's
+hit-rate-vs-depth question (`benchmarks/run.py spec` records the table in
+BENCH_spec.json).
+"""
+
+from .drafter import (Drafter, ModelDrafter, NgramDrafter, ReplayDrafter,
+                      ScriptedDrafter)
+
+__all__ = ["Drafter", "ModelDrafter", "NgramDrafter", "ReplayDrafter",
+           "ScriptedDrafter"]

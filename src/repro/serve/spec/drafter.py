@@ -1,0 +1,185 @@
+"""Pluggable drafters for the speculative serving loop (see package doc).
+
+A drafter is HOST-side: per DECODE slot per tick the engine asks it for up
+to `depth` candidate next tokens, computed from the request's own emitted
+context (prompt + generated so far). Whatever it proposes, correctness is
+the verify tick's job — a wrong draft costs wasted verify positions, never
+wrong tokens — so drafters are free to be heuristic, stale, or plain
+wrong. Determinism still matters for reproducible traces: every drafter
+here is a pure function of the request's visible history (ModelDrafter's
+cache included — a release + replay resyncs to the same state).
+"""
+
+from __future__ import annotations
+
+from typing import Callable, Dict, List, Optional, Sequence
+
+import numpy as np
+
+
+class Drafter:
+    """Base drafter protocol.
+
+    `draft(request, depth)` returns AT MOST `depth` proposed next tokens
+    (ints); fewer (or none) is always legal — the engine just verifies a
+    shorter window that tick. `release(uid)` is the lifecycle hook the
+    engine calls when a request leaves its slot (retire OR preemption) so
+    stateful drafters drop their per-request caches; a preempted request's
+    replay then re-derives identical drafts from scratch.
+    """
+
+    def draft(self, request, depth: int) -> List[int]:
+        raise NotImplementedError
+
+    def release(self, uid: int) -> None:
+        """Per-request cache drop (no-op for stateless drafters)."""
+
+
+def _context(request) -> np.ndarray:
+    return np.concatenate([np.asarray(request.prompt, np.int64),
+                           np.asarray(request.generated, np.int64)])
+
+
+class NgramDrafter(Drafter):
+    """Self-drafting by suffix lookup (prompt-lookup decoding): find the
+    most recent earlier occurrence of the context's trailing n-gram and
+    propose the tokens that followed it. Tries the longest n first
+    (`max_ngram` down to `min_ngram`) — longer matches are stronger
+    evidence of a repeating span. Stateless and model-free: the draft
+    source is each slot's OWN emitted tokens, the same self-speculation
+    framing Vegas uses, and the natural fit for serving traces with
+    repetitive structure (code, templated text, retrieval contexts).
+    """
+
+    def __init__(self, max_ngram: int = 3, min_ngram: int = 1):
+        if not (1 <= min_ngram <= max_ngram):
+            raise ValueError(f"need 1 <= min_ngram <= max_ngram, got "
+                             f"({min_ngram}, {max_ngram})")
+        self.max_ngram = int(max_ngram)
+        self.min_ngram = int(min_ngram)
+
+    def draft(self, request, depth: int) -> List[int]:
+        ctx = _context(request)
+        for n in range(min(self.max_ngram, len(ctx) - 1),
+                       self.min_ngram - 1, -1):
+            suffix = ctx[-n:]
+            # most recent earlier occurrence of the suffix (excluding the
+            # suffix itself): windows end before position len(ctx) - n
+            limit = len(ctx) - n
+            for start in range(limit - 1, -1, -1):
+                if np.array_equal(ctx[start:start + n], suffix):
+                    cont = ctx[start + n:start + n + depth]
+                    if len(cont):
+                        return [int(t) for t in cont]
+                    break               # match flush with the suffix: try shorter n
+        return []
+
+
+class ReplayDrafter(Drafter):
+    """Oracle replay: drafts the request's KNOWN continuation, indexed by
+    how many tokens it has generated so far. With greedy verification this
+    accepts 100% of drafted tokens — the speculative upper bound — which
+    makes it the measurement harness for `benchmarks/run.py spec` (how
+    much does a verify tick amortize when drafts are free and perfect?)
+    and the full-accept leg of the rollback property tests.
+
+    `continuations[uid]` is the request's generated-token sequence (e.g.
+    recorded from a prior non-speculative run of the same trace).
+    """
+
+    def __init__(self, continuations: Dict[int, Sequence[int]]):
+        self._cont = {int(u): [int(t) for t in seq]
+                      for u, seq in continuations.items()}
+
+    def draft(self, request, depth: int) -> List[int]:
+        cont = self._cont.get(request.uid)
+        if cont is None:
+            return []
+        g = len(request.generated)
+        return cont[g:g + depth]
+
+
+class ScriptedDrafter(Drafter):
+    """Deterministic draft scripting for tests: `fn(request, depth)` is
+    called verbatim. Lets a property test force arbitrary accept/reject
+    traces (correct prefixes of any length, corrupted tails, empty drafts)
+    and assert the engine's rollback is exact for every one of them."""
+
+    def __init__(self, fn: Callable[..., List[int]]):
+        self._fn = fn
+
+    def draft(self, request, depth: int) -> List[int]:
+        return [int(t) for t in self._fn(request, depth)][:depth]
+
+
+class ModelDrafter(Drafter):
+    """Classic two-model speculation: a small draft model proposes the
+    continuation by greedy decode. The draft model comes from the model
+    registry (`configs.registry.get_config(name, smoke=...)` with randomly
+    initialized parameters) or is passed in as an explicit (model, params)
+    pair — e.g. the TARGET model itself, which makes every greedy draft
+    match and turns this into the self-speculation upper bound with real
+    draft-side compute.
+
+    Per request it keeps a batch-1 dense decode state plus a synced token
+    count. Drafting feeds the unsynced context suffix through the jitted
+    step, then rolls `depth` greedy tokens forward; rollback of the draft
+    state is the dense-layout length reset (rows beyond `length` are dead
+    by masking and get overwritten when the accepted tokens stream in).
+    One batch-1 step per context token is the simple, exact form — a
+    production drafter would batch its slots the way the engine batches
+    the verify tick.
+    """
+
+    def __init__(self, model_or_name, params=None, *, max_len: int,
+                 smoke: bool = True, seed: int = 0):
+        import jax
+        if isinstance(model_or_name, str):
+            from repro.configs.registry import get_config
+            from repro.models.api import build_model
+            model = build_model(get_config(model_or_name, smoke=smoke))
+            params = model.init_params(jax.random.PRNGKey(seed))
+        else:
+            model = model_or_name
+            if params is None:
+                raise ValueError("explicit draft model needs its params")
+        self.model = model
+        self.params = params
+        self.max_len = int(max_len)
+        self._step = jax.jit(
+            lambda p, s, t: self.model.serve_step(p, s, t))
+        self._ctx: Dict[int, list] = {}    # uid -> [state, synced_len]
+
+    def draft(self, request, depth: int) -> List[int]:
+        import jax.numpy as jnp
+        ctx = _context(request)
+        if len(ctx) + depth > self.max_len:
+            depth = max(0, self.max_len - len(ctx))
+        if depth == 0:
+            return []
+        entry = self._ctx.get(request.uid)
+        if entry is None:
+            entry = [self.model.init_decode_state(1, self.max_len), 0]
+        state, synced = entry
+        logits = None
+        for t in ctx[synced:]:
+            logits, state = self._step(self.params, state,
+                                       jnp.asarray([t], jnp.int32))
+        if logits is None:                  # nothing new since last draft:
+            return []                       # the last draft was fully rejected
+        drafts = []
+        for _ in range(depth):
+            nt = int(jnp.argmax(logits[0]))
+            drafts.append(nt)
+            logits, state = self._step(self.params, state,
+                                       jnp.asarray([nt], jnp.int32))
+        # dense-state rollback: reset length to the synced context — the
+        # drafted rows beyond it are dead by masking and will be
+        # overwritten by whatever the verify tick actually accepts
+        state = dict(state)
+        state["length"] = jnp.full_like(state["length"], len(ctx))
+        self._ctx[request.uid] = [state, len(ctx)]
+        return drafts
+
+    def release(self, uid: int) -> None:
+        self._ctx.pop(uid, None)

@@ -184,6 +184,31 @@ def dsa_sparse_attention_paged(q: jnp.ndarray, k_pages: jnp.ndarray,
     return out.reshape(b, h, hd)
 
 
+def dsa_sparse_attention_paged_mq(q: jnp.ndarray, k_pages: jnp.ndarray,
+                                  v_pages: jnp.ndarray, table: jnp.ndarray,
+                                  topk_idx: jnp.ndarray,
+                                  lengths: jnp.ndarray,
+                                  *, scale: float, rules=None) -> jnp.ndarray:
+    """Multi-query-row form of `dsa_sparse_attention_paged` — the XLA shape
+    of the speculative verify tick's attention stage (the Pallas hot-spot
+    form is `kernels.paged_sparse_decode_attn_mq`).
+
+    q: (B, Q, H, HD) — the d+1 draft positions' queries; topk_idx:
+    (B, Q, K) per-position LOGICAL selections; lengths: (B, Q) per-position
+    causal extents (position j attends to L0 + j + 1 tokens). The Q axis
+    folds into the batch of the single-row form — the pools are global and
+    the block table rows repeat — so each position's bits are exactly the
+    single-row path's, which is what lets the verify scan stand in for
+    d+1 sequential steps without perturbing a single logit.
+    """
+    b, qn = q.shape[:2]
+    out = dsa_sparse_attention_paged(
+        q.reshape((b * qn,) + q.shape[2:]), k_pages, v_pages,
+        jnp.repeat(table, qn, axis=0), topk_idx.reshape(b * qn, -1),
+        lengths.reshape(b * qn), scale=scale, rules=rules)
+    return out.reshape((b, qn) + out.shape[1:])
+
+
 def dsa_select(indexer_params, x: jnp.ndarray, idx_kcache: jnp.ndarray,
                prev_topk: jnp.ndarray, lengths: jnp.ndarray,
                *, k: int, heads: int, dim: int, rope_base: float,

@@ -183,6 +183,13 @@ def sp_dsa_decode_paged_local(q, k_pages, v_pages, table_local, idx_params, h,
     configs — DESIGN.md §2 — so there is no N-gate here; the engine-level
     bit-identity pin runs below `gate_max_n` where the single-device auto
     gate resolves to the same mixed dispatch).
+
+    Speculative verify (DESIGN.md §spec-decode): the sharded verify tick
+    (`transformer.serve_step_sp_spec_paged`) scans this stage once per
+    draft position inside one shard_map, threading `prev_topk` from each
+    position's `new_topk` into the next — the collective schedule per
+    position is exactly the non-speculative step's, so a d+1-position
+    verify tick costs d+1 of these O(1)-in-context schedules.
     """
     b, hl, hd = q.shape
     kvh = k_pages.shape[2]

@@ -1,14 +1,14 @@
 """Committed BENCH_*.json files must match the keys their writers emit.
 
-`benchmarks/run.py`'s paged / paged_attn / sp_engine sections commit
-machine-readable result files to the repo root for trend tracking. A
-benchmark refactor that renames or drops keys would silently strand the
+`benchmarks/run.py`'s paged / paged_attn / sp_engine / spec sections
+commit machine-readable result files to the repo root for trend tracking.
+A benchmark refactor that renames or drops keys would silently strand the
 committed files (dashboards and the README's claims would then describe
 fields that no run regenerates) — this schema check turns that into a test
 failure. The expected keys below are the writers' output contract:
 `benchmarks/paged_bench.py`, `benchmarks/paged_attn_bench.py`,
-`benchmarks/sp_engine_bench.py` — update BOTH sides in the same PR when a
-section's schema legitimately changes."""
+`benchmarks/sp_engine_bench.py`, `benchmarks/spec_bench.py` — update BOTH
+sides in the same PR when a section's schema legitimately changes."""
 
 import json
 from pathlib import Path
@@ -50,6 +50,17 @@ SCHEMAS = {
         "engine": {"single"},
         "sharded_tokens_identical_to_single_device": None,
     },
+    "BENCH_spec.json": {
+        "config": {"arch", "k", "num_slots", "max_len", "page_size",
+                   "max_new_tokens", "depths", "full"},
+        "nonspec": {"tokens_per_s", "ticks", "gvr_hit_rate"},
+        "spec": None,                        # keyed by draft depth
+        "gvr_hit_rate_by_draft_pos": None,   # keyed by draft depth
+        "spec_tokens_identical_to_nonspec": None,
+        "speedup_best": None,
+        "ngram": {"depth", "tokens_per_s", "acceptance_rate",
+                  "speedup_vs_nonspec"},
+    },
 }
 
 
@@ -82,3 +93,11 @@ def test_bench_acceptance_flags_still_true():
     assert sp["sharded_tokens_identical_to_single_device"] is True
     assert sp["context_capacity"]["capacity_multiplier"] == \
         sp["config"]["seq_shards"]
+    spec = json.loads((ROOT / "BENCH_spec.json").read_text())
+    assert spec["spec_tokens_identical_to_nonspec"] is True
+    assert spec["speedup_best"] >= 1.5
+    # every benchmarked depth has a matching hit-rate-vs-position row of
+    # depth+1 entries (position 0 + the draft positions)
+    for depth, row in spec["gvr_hit_rate_by_draft_pos"].items():
+        assert len(row) == int(depth) + 1, (depth, row)
+        assert str(depth) in spec["spec"]

@@ -137,6 +137,55 @@ def test_sp_engine_preemption_trace_bit_identical(sp_engine_results):
     assert sharded["hit"] == single["hit"]
 
 
+# ---- shard-aware preemption victim choice (host-side, no mesh) ------------
+
+
+def test_preempt_victim_prefers_pressured_shard_holders():
+    """ROADMAP open item, now pinned: when a PoolExhausted names a
+    pressured shard, the victim must actually HOLD pages in that shard —
+    the old shard-blind order would preempt the PREFILL slot with the most
+    remaining prompt even when all its pages live elsewhere, destroying
+    its work without freeing a single page where the allocation failed."""
+    from types import SimpleNamespace
+    import numpy as np
+    from repro.serve import DecodeEngine
+    from repro.serve.scheduler import DECODE, PREFILL
+
+    class KV:
+        def __init__(self, holdings):
+            self._h = holdings
+
+        def pages_in_shard(self, slot, shard):
+            return self._h[slot].get(shard, 0)
+
+    # slot 0: PREFILL, most remaining prompt (old-policy victim) but all
+    # pages in shard 1; slot 1: PREFILL holding shard-0 pages; slot 2:
+    # DECODE holding shard-0 pages
+    slots = [
+        SimpleNamespace(phase=PREFILL, prompt=np.zeros(40), prefill_pos=0,
+                        admitted_at=5, generated=[]),
+        SimpleNamespace(phase=PREFILL, prompt=np.zeros(10), prefill_pos=0,
+                        admitted_at=1, generated=[]),
+        SimpleNamespace(phase=DECODE, prompt=np.zeros(8), prefill_pos=8,
+                        admitted_at=0, generated=[1, 2]),
+    ]
+    stub = SimpleNamespace(slots=slots,
+                           kv=KV({0: {1: 4}, 1: {0: 2}, 2: {0: 1}}))
+    pick = DecodeEngine._preempt_victim
+    # pressured shard 0: slot 1 is the only PREFILL holder → victim
+    assert pick(stub, exclude=None, shard=0) == 1
+    # shard-blind (single pool / no shard info): old order unchanged
+    assert pick(stub, exclude=None, shard=None) == 0
+    # only the DECODE slot holds shard-0 pages → PREFILL order falls
+    # through to it
+    stub2 = SimpleNamespace(slots=slots,
+                            kv=KV({0: {1: 4}, 1: {1: 2}, 2: {0: 1}}))
+    assert pick(stub2, exclude=None, shard=0) == 2
+    # nobody holds pages in the pressured shard: preempting anyone would
+    # be pure waste → None (the engine then reports the per-shard squeeze)
+    assert pick(stub, exclude=None, shard=3) is None
+
+
 # ---- constructor contracts (no multi-device mesh needed) ------------------
 
 def _smoke_model():
