@@ -31,14 +31,12 @@ SHAPES = {"train_4k": (256, 4096), "prefill_32k": (32, 32768),
 
 def _cfg(arch):
     from repro.configs.registry import get_config
-    return get_config(arch.replace("_", "-") if "-" not in arch else arch) \
-        if False else get_config(arch)
+    return get_config(arch)
 
 
 def analytic_terms(arch: str, shape: str, n_devices: int) -> dict:
     """FLOPs (global) and HBM bytes (per device) from architecture algebra."""
-    from repro.configs.registry import get_config
-    cfg = get_config(arch)
+    cfg = _cfg(arch)
     b, s = SHAPES[shape]
     n_act = cfg.active_param_count()
     n_tot = cfg.param_count()
@@ -162,5 +160,238 @@ def bench_roofline():
     return out
 
 
+# --------------------------------------------------------------------------
+# §Roofline, serving half: MEASURED serving kernels vs the memory-bound
+# peak (EXPERIMENTS.md §Roofline). Three pins into BENCH_roofline.json:
+#   1. per-kernel analytic HBM bytes vs 819 GB/s memory-bound peak, next to
+#      the measured CPU-interpret wall (labeled cpu — a dispatch/algorithmic
+#      reality check, NOT a TPU measurement),
+#   2. mq vs scan speculative verify-tick wall on the real paged serving
+#      step (asserted: mq <= scan at every spec_depth >= 2),
+#   3. page- vs token-granular gather bytes from a REAL decode Top-K trace
+#      (asserted: page bytes <= token bytes x page_size).
+# --------------------------------------------------------------------------
+
+BENCH_JSON = "BENCH_roofline.json"
+
+
+def _kernel_rows():
+    """Micro-roofline per serving Pallas kernel: analytic HBM bytes of one
+    launch vs the TPU memory-bound floor, next to the measured CPU wall."""
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+    from repro.kernels import ops
+    from repro.sparse.dsa import page_gather_stats
+    from .common import time_fn
+
+    b, h, kvh, d, dv = 4, 8, 2, 32, 32
+    page_size, mp, k, q_rows = 16, 32, 64, 3
+    n = mp * page_size
+    di, hi = 32, 4
+    p_pages = b * mp
+
+    rng = np.random.default_rng(11)
+    q = jnp.asarray(rng.standard_normal((b, h, d)), jnp.float32)
+    qm = jnp.asarray(rng.standard_normal((b, q_rows, h, d)), jnp.float32)
+    kp = jnp.asarray(rng.standard_normal((p_pages, page_size, kvh, d)),
+                     jnp.float32)
+    vp = jnp.asarray(rng.standard_normal((p_pages, page_size, kvh, dv)),
+                     jnp.float32)
+    # fully mapped identity tables + clustered Top-K (page-locality is the
+    # regime the pg kernel exists for; the stats row reports the real count)
+    table = jnp.asarray(
+        np.arange(b * mp, dtype=np.int32).reshape(b, mp))
+    base = rng.integers(0, n - page_size, size=(b, 1))
+    idx = jnp.asarray(np.sort(
+        (base + rng.integers(0, 4 * page_size, size=(b, k))) % n,
+        axis=-1).astype(np.int32))
+    idx_mq = jnp.asarray(np.sort(
+        (base[:, None] + rng.integers(0, 4 * page_size, size=(b, q_rows, k)))
+        % n, axis=-1).astype(np.int32))
+    lengths = jnp.full((b,), n, jnp.int32)
+    lengths_mq = jnp.broadcast_to(lengths[:, None], (b, q_rows))
+    qi = jnp.asarray(rng.standard_normal((b, hi, di)), jnp.float32)
+    qi_mq = jnp.asarray(rng.standard_normal((b, q_rows, hi, di)), jnp.float32)
+    ikp = jnp.asarray(rng.standard_normal((p_pages, page_size, di)),
+                      jnp.float32)
+    w = jnp.asarray(rng.random((hi,)), jnp.float32)
+    prev = jnp.asarray(rng.permutation(n)[:k][None].repeat(b, 0)
+                       .astype(np.int32))
+
+    row_b = (kvh * d + kvh * dv) * 4                 # one gathered K+V row
+    pages_touched = int(np.asarray(page_gather_stats(
+        idx, page_size=page_size, num_logical_pages=mp)).sum())
+    fixed = b * (h * d + h * dv) * 4                 # q in + out per launch
+
+    kernels = [
+        ("paged_sparse_decode_attn(token)",
+         lambda: ops.paged_sparse_decode_attn(q, kp, vp, table, idx),
+         fixed + b * k * row_b, b * k),
+        ("paged_sparse_decode_attn_pg(page)",
+         lambda: ops.paged_sparse_decode_attn_pg(q, kp, vp, table, idx),
+         fixed + pages_touched * page_size * row_b, pages_touched),
+        ("paged_sparse_decode_attn_mq",
+         lambda: ops.paged_sparse_decode_attn_mq(qm, kp, vp, table, idx_mq),
+         q_rows * (fixed + b * k * row_b), q_rows * b * k),
+        ("paged_dense_decode_attn",
+         lambda: ops.paged_dense_decode_attn(q, kp, vp, table, lengths),
+         fixed + b * mp * page_size * row_b, b * mp),
+        ("paged_indexer_topk",
+         lambda: ops.paged_indexer_topk(qi, ikp, w, table, prev, k,
+                                        lengths=lengths),
+         b * (hi * di * 4 + n * di * 4 + k * 4 + k * 8), b * mp),
+        ("paged_indexer_topk_mq",
+         lambda: ops.paged_indexer_topk_mq(qi_mq, ikp, w, table, prev, k,
+                                           lengths=lengths_mq),
+         q_rows * b * (hi * di * 4 + n * di * 4 + k * 4 + k * 8),
+         q_rows * b * mp),
+    ]
+
+    out = []
+    for name, fn, hbm_bytes, descriptors in kernels:
+        wall_us = time_fn(lambda f=fn: jax.block_until_ready(f()),
+                          iters=3, warmup=1)
+        peak_s = hbm_bytes / HBM
+        out.append(dict(
+            kernel=name, hbm_bytes=int(hbm_bytes), dma_descriptors=descriptors,
+            tpu_memory_bound_peak_s=peak_s,
+            cpu_wall_us=round(wall_us, 1),
+            cpu_achieved_bytes_per_s=hbm_bytes / (wall_us * 1e-6),
+            cpu_distance_from_tpu_peak=round(wall_us * 1e-6 / peak_s, 1),
+        ))
+    return out, dict(b=b, h=h, kvh=kvh, d=d, dv=dv, page_size=page_size,
+                     mp=mp, k=k, q_rows=q_rows, indexer_dim=di,
+                     indexer_heads=hi, pages_touched=pages_touched)
+
+
+def _serving_setup():
+    """Smoke model + warmed paged decode state with a real context."""
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+    from repro.configs.registry import get_config
+    from repro.models.api import build_model
+
+    cfg = get_config("llama3.2-1b", smoke=True)
+    model = build_model(cfg)
+    params = model.init_params(jax.random.PRNGKey(0))
+    batch, max_len, page_size = 2, 64, 8
+    mp = max_len // page_size
+    state = model.init_paged_decode_state(batch, max_len,
+                                          num_pages=batch * mp,
+                                          page_size=page_size)
+    state = dict(state)
+    state["page_table"] = jnp.asarray(
+        np.arange(batch * mp, dtype=np.int32).reshape(batch, mp))
+    step = jax.jit(lambda p, s, t: model.serve_step_paged(p, s, t))
+    rng = np.random.default_rng(3)
+    toks = rng.integers(1, cfg.vocab, size=(20, batch)).astype(np.int32)
+    for t in toks:                                   # real 20-token context
+        _, state = step(params, state, jnp.asarray(t))
+    return cfg, model, params, state, page_size
+
+
+def _verify_tick_rows(cfg, model, params, state):
+    """mq vs scan wall for ONE jitted speculative verify tick."""
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+    from .common import time_fn
+
+    batch = int(state["length"].shape[0])
+    rng = np.random.default_rng(9)
+    rows = []
+    for depth in (1, 2, 4):
+        tokens = jnp.asarray(rng.integers(1, cfg.vocab,
+                                          size=(batch, depth + 1)), jnp.int32)
+        dl = jnp.full((batch,), depth, jnp.int32)
+        ma = jnp.full((batch,), depth, jnp.int32)
+        walls = {}
+        for vk in ("scan", "mq"):
+            fn = jax.jit(lambda p, s, t, d_, m_, _vk=vk:
+                         model.serve_step_spec_paged(
+                             p, s, t, draft_len=d_, max_accept=m_,
+                             verify_kernel=_vk))
+            walls[vk] = time_fn(fn, params, state, tokens, dl, ma)
+        rows.append(dict(spec_depth=depth,
+                         scan_wall_us=round(walls["scan"], 1),
+                         mq_wall_us=round(walls["mq"], 1),
+                         mq_speedup=round(walls["scan"] / walls["mq"], 2)))
+        if depth >= 2:
+            assert walls["mq"] <= walls["scan"], (
+                f"mq verify tick slower than scan at depth {depth}: "
+                f"{walls['mq']:.0f}us vs {walls['scan']:.0f}us")
+    return rows
+
+
+def _gather_bytes_row(cfg, state, page_size):
+    """Page- vs token-granular gather traffic on the REAL Top-K trace left
+    in the warmed decode state's prev_topk feedback."""
+    import numpy as np
+    from repro.sparse.dsa import page_gather_stats
+
+    topk = state["prev_topk"]                        # (L, B, K)
+    l, b, k = topk.shape
+    mp = state["page_table"].shape[1]
+    flat = topk.reshape(l * b, k)
+    valid = int(np.asarray((flat >= 0).sum()))
+    pages = int(np.asarray(page_gather_stats(
+        flat, page_size=page_size, num_logical_pages=mp)).sum())
+    row_b = (2 * cfg.n_kv_heads * cfg.hd) * state["k_pages"].dtype.itemsize
+    token_bytes = valid * row_b
+    page_bytes = pages * page_size * row_b
+    assert page_bytes <= token_bytes * page_size, (page_bytes, token_bytes)
+    return dict(layers=l, slots=b, k=k, page_size=page_size,
+                selected_tokens=valid, distinct_pages=pages,
+                token_granular_bytes=token_bytes,
+                page_granular_bytes=page_bytes,
+                page_over_token_ratio=round(page_bytes / token_bytes, 3),
+                worst_case_ratio=page_size)
+
+
+def bench_roofline_serving():
+    kernel_rows, kernel_cfg = _kernel_rows()
+    cfg, model, params, state, page_size = _serving_setup()
+    tick_rows = _verify_tick_rows(cfg, model, params, state)
+    gather = _gather_bytes_row(cfg, state, page_size)
+
+    results = dict(
+        peaks=dict(hbm_bytes_per_s=HBM, peak_flops=PEAK, ici_bytes_per_s=ICI),
+        note=("cpu_* columns are CPU-interpret walls (dispatch/algorithmic "
+              "reality check); tpu_memory_bound_peak_s is the analytic "
+              "819 GB/s floor — see EXPERIMENTS.md §Roofline"),
+        kernel_config=kernel_cfg,
+        kernels=kernel_rows,
+        verify_tick=dict(arch=cfg.name, rows=tick_rows,
+                         asserted="mq_wall <= scan_wall at spec_depth >= 2"),
+        gather_granularity=gather,
+    )
+    with open(BENCH_JSON, "w") as f:
+        json.dump(results, f, indent=2)
+        f.write("\n")
+
+    rows = []
+    for r in kernel_rows:
+        rows.append((f"roofline/{r['kernel']}/tpu_peak_s",
+                     f"{r['tpu_memory_bound_peak_s']:.2e}",
+                     f"hbm_bytes={r['hbm_bytes']};descr={r['dma_descriptors']}"))
+        rows.append((f"roofline/{r['kernel']}/cpu_wall_us", r["cpu_wall_us"],
+                     "cpu_interpret"))
+    for r in tick_rows:
+        rows.append((f"roofline/verify_d{r['spec_depth']}/mq_speedup",
+                     r["mq_speedup"],
+                     f"scan={r['scan_wall_us']}us;mq={r['mq_wall_us']}us"))
+    rows.append(("roofline/gather/page_over_token_ratio",
+                 gather["page_over_token_ratio"],
+                 f"asserted_le_{page_size}x"))
+    return rows
+
+
 if __name__ == "__main__":
-    print(markdown(table()))
+    import sys
+    if "--dryrun" in sys.argv:
+        print(markdown(table()))
+    else:
+        from .common import emit
+        emit(bench_roofline_serving())

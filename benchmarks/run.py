@@ -39,8 +39,9 @@ def _register():
         "fig11": sb.bench_fig11_e2e_decode,
         "kernels": sb.bench_kernels,
     })
+    from . import roofline
+    SECTIONS["roofline_serving"] = roofline.bench_roofline_serving
     try:
-        from . import roofline
         import glob
         if glob.glob("results/dryrun/*pod1.json"):
             SECTIONS["roofline"] = roofline.bench_roofline

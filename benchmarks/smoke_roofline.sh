@@ -1,0 +1,24 @@
+#!/usr/bin/env sh
+# Tier-2 smoke: run the serving-kernel roofline benchmark on CPU.
+#
+#   ./benchmarks/smoke_roofline.sh
+#
+# Measures every paged serving Pallas kernel against its analytic
+# memory-bound peak (819 GB/s traffic model; EXPERIMENTS.md §Roofline),
+# times the mq vs scan speculative verify tick on the real paged serving
+# step (asserting mq <= scan wall at every spec_depth >= 2), and accounts
+# page- vs token-granular gather bytes on a real decode Top-K trace
+# (asserting page bytes <= token bytes x page_size). Leaves
+# BENCH_roofline.json in the repo root. Exits non-zero if the section's
+# acceptance asserts fail or the section errors.
+set -eu
+cd "$(dirname "$0")/.."
+export JAX_PLATFORMS="${JAX_PLATFORMS:-cpu}"
+PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" python -m benchmarks.run roofline_serving | tee /tmp/roofline_bench.out
+# benchmarks/run.py swallows section exceptions into */ERROR rows — fail on them
+if grep -q "ERROR" /tmp/roofline_bench.out; then
+    echo "roofline benchmark reported an error" >&2
+    exit 1
+fi
+test -f BENCH_roofline.json
+echo "roofline smoke OK"

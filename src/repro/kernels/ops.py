@@ -18,8 +18,10 @@ from .gvr_topk import DEFAULT_CHUNK, gvr_topk_pallas
 from .indexer_topk import (indexer_topk_pallas, paged_indexer_topk_mq_pallas,
                            paged_indexer_topk_pallas)
 from .paged_gather import paged_gather_pallas
-from .sparse_attn import (paged_sparse_decode_attn_mq_pallas,
+from .sparse_attn import (paged_dense_decode_attn_pallas,
+                          paged_sparse_decode_attn_mq_pallas,
                           paged_sparse_decode_attn_pallas,
+                          paged_sparse_decode_attn_pg_pallas,
                           sparse_decode_attn_pallas)
 
 NEG = -3.4028235e38
@@ -138,6 +140,41 @@ def paged_sparse_decode_attn(q: jnp.ndarray, k_pages: jnp.ndarray,
     """
     return paged_sparse_decode_attn_pallas(q, k_pages, v_pages, table, idx,
                                            scale=scale, interpret=interpret)
+
+
+@partial(jax.jit, static_argnames=("scale", "interpret"))
+def paged_sparse_decode_attn_pg(q: jnp.ndarray, k_pages: jnp.ndarray,
+                                v_pages: jnp.ndarray, table: jnp.ndarray,
+                                idx: jnp.ndarray, *,
+                                scale: Optional[float] = None,
+                                interpret: bool = True):
+    """Page-granular block-table-native sparse decode attention (B,H,DV):
+    selected indices sharing a logical page move as ONE whole-page DMA
+    descriptor (≤ min(K, MP) descriptors per query vs exactly K row-sized
+    ones) and the unselected rows are sliced off in VMEM. Same masking
+    semantics as `paged_sparse_decode_attn`; contributions match as a set
+    but accumulate in page order, so it pins allclose (the bitwise
+    page-vs-token guarantee lives on the XLA serving path)."""
+    return paged_sparse_decode_attn_pg_pallas(q, k_pages, v_pages, table,
+                                              idx, scale=scale,
+                                              interpret=interpret)
+
+
+@partial(jax.jit, static_argnames=("scale", "window", "interpret"))
+def paged_dense_decode_attn(q: jnp.ndarray, k_pages: jnp.ndarray,
+                            v_pages: jnp.ndarray, table: jnp.ndarray,
+                            lengths: jnp.ndarray, *,
+                            scale: Optional[float] = None,
+                            window: Optional[int] = None,
+                            interpret: bool = True):
+    """Fused paged DENSE decode attention (B,H,DV) — the pre-DSA-gate
+    fallback's hot-spot form: the full causal extent is attended straight
+    off the page pools (grid (B, MP), one whole-page DMA per step), never
+    materializing the logical view. Causal + optional sliding-window
+    masking happens on global positions inside the kernel."""
+    return paged_dense_decode_attn_pallas(q, k_pages, v_pages, table,
+                                          lengths, scale=scale,
+                                          window=window, interpret=interpret)
 
 
 @partial(jax.jit, static_argnames=("scale", "interpret"))

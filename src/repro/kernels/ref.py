@@ -87,6 +87,42 @@ def paged_attn_mq_ref(q: jnp.ndarray, k_pages: jnp.ndarray,
                     in_axes=(1, 1), out_axes=1)(q, idx)
 
 
+def paged_dense_attn_ref(q: jnp.ndarray, k_pages: jnp.ndarray,
+                         v_pages: jnp.ndarray, table: jnp.ndarray,
+                         lengths: jnp.ndarray, scale=None, window=None):
+    """Fused paged DENSE decode attention oracle (the pre-DSA fallback):
+    one query per slot attends its whole causal extent off the page pools.
+
+    q: (B, H, D); k/v_pages: (P, page_size, KVH, D[v]); table: (B, MP)
+    block table (-1 = unmapped); lengths: (B,) causal extents; `window`
+    an optional sliding-attention width. Validity is purely the causal /
+    window mask — mapped pages always cover [0, length) by the allocator
+    contract, so unmapped entries only occur past the extent. Returns
+    (B, H, DV) f32 — matches layers.decode_attention_paged's math over
+    the gathered logical view.
+    """
+    b, h, d = q.shape
+    p, page_size, kvh = k_pages.shape[:3]
+    mp = table.shape[1]
+    n = mp * page_size
+    scale = scale if scale is not None else 1.0 / jnp.sqrt(d)
+    gather = jnp.clip(table, 0, p - 1)
+    kc = k_pages[gather].reshape(b, n, kvh, -1)           # (B, N, KVH, D)
+    vc = v_pages[gather].reshape(b, n, kvh, -1)
+    group = h // kvh
+    kq = kc[:, :, (jnp.arange(h) // group), :]            # (B, N, H, D)
+    vq = vc[:, :, (jnp.arange(h) // group), :]
+    logits = jnp.einsum("bhd,bnhd->bhn", q.astype(jnp.float32),
+                        kq.astype(jnp.float32)) * scale
+    pos = jnp.arange(n)[None, None, :]
+    valid = pos < lengths[:, None, None]
+    if window is not None:
+        valid &= pos > lengths[:, None, None] - 1 - window
+    logits = jnp.where(valid, logits, -jnp.inf)
+    pr = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("bhn,bnhd->bhd", pr, vq.astype(jnp.float32))
+
+
 def sparse_decode_attn_ref(q: jnp.ndarray, kcache: jnp.ndarray, vcache: jnp.ndarray,
                            idx: jnp.ndarray, counts=None, scale=None):
     """Sparse decode attention oracle: attend only over gathered Top-K rows.

@@ -385,3 +385,252 @@ def paged_sparse_decode_attn_mq_pallas(q: jnp.ndarray, k_pages: jnp.ndarray,
     out_shape = jax.ShapeDtypeStruct((b, qn, h, dv), jnp.float32)
     return pl.pallas_call(kern, grid_spec=grid_spec, out_shape=out_shape,
                           interpret=interpret)(table, idx, q, k_pages, v_pages)
+
+
+# --------------------------------------------------------------------------
+# Page-granular variant — whole-page DMA: selected indices sharing a page
+# move as ONE page-sized descriptor, rows are sliced out in VMEM.
+# --------------------------------------------------------------------------
+
+def _paged_attn_pg_kernel(tpad_ref, up_ref, q_ref, k_ref, v_ref, rv_ref,
+                          o_ref, m_scr, l_scr, acc_scr, *, nsteps, scale, h,
+                          kvh, dv, page_size):
+    j = pl.program_id(1)
+    g = h // kvh
+
+    @pl.when(j == 0)
+    def _():
+        m_scr[...] = jnp.full_like(m_scr[...], -jnp.inf)
+        l_scr[...] = jnp.zeros_like(l_scr[...])
+        acc_scr[...] = jnp.zeros_like(acc_scr[...])
+
+    q = q_ref[0].astype(jnp.float32)                     # (H, D)
+    kb = k_ref[0].astype(jnp.float32)                    # (page_size, KVH, D)
+    vb = v_ref[0].astype(jnp.float32)                    # (page_size, KVH, DV)
+    rv = rv_ref[0, 0]                                    # (page_size,) int32
+
+    # one whole gathered page per step: rows the Top-K did NOT select (and
+    # every row of sentinel/unmapped pages) arrive in VMEM but are masked
+    # out of the softmax here — the slice-in-fast-memory half of the
+    # page-granular DMA contract
+    qg = q.reshape(kvh, g, -1)
+    logits = jnp.einsum("khd,tkd->kht", qg, kb).reshape(h, page_size) * scale
+    logits = jnp.where((rv > 0)[None, :], logits, -jnp.inf)
+
+    m_prev = m_scr[...]                                   # (H, 1)
+    l_prev = l_scr[...]
+    m_new = jnp.maximum(m_prev, jnp.max(logits, axis=-1, keepdims=True))
+    m_safe = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+    alpha = jnp.where(jnp.isfinite(m_prev), jnp.exp(m_prev - m_safe), 0.0)
+    p = jnp.exp(jnp.where(jnp.isfinite(logits), logits - m_safe, -jnp.inf))
+    p = jnp.where(jnp.isfinite(logits), p, 0.0)           # (H, page_size)
+    l_scr[...] = l_prev * alpha + jnp.sum(p, axis=-1, keepdims=True)
+    pv = jnp.einsum("kgt,tkd->kgd", p.reshape(kvh, g, page_size),
+                    vb).reshape(h, dv)
+    acc_scr[...] = acc_scr[...] * alpha + pv
+    m_scr[...] = m_new
+
+    @pl.when(j == nsteps - 1)
+    def _():
+        l = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0] = (acc_scr[...] / l).astype(o_ref.dtype)
+
+
+def paged_sparse_decode_attn_pg_pallas(q: jnp.ndarray, k_pages: jnp.ndarray,
+                                       v_pages: jnp.ndarray,
+                                       table: jnp.ndarray, idx: jnp.ndarray,
+                                       *, scale: Optional[float] = None,
+                                       interpret: bool = True):
+    """Page-granular form of `paged_sparse_decode_attn_pallas`: same
+    arguments and masking semantics, coarser DMA. The wrapper builds the
+    per-slot DISTINCT-page descriptor list (`sparse.dsa.distinct_pages` —
+    at most min(K, MP) pages, sentinel MP for unused slots) plus a
+    per-(page, row) selection mask; the grid runs (B, S) steps, each
+    DMA-ing one whole (page_size × KVH × D) page addressed through the
+    scalar-prefetched descriptor, and the kernel slices the selected rows
+    out in VMEM. Per query ≤ min(K, MP)·page_size rows move in ≤
+    min(K, MP) descriptors (vs exactly K single-row descriptors for the
+    token-granular kernel) — page-locality in the Top-K set turns into
+    proportionally fewer, larger transfers, which is the descriptor-bound
+    regime the roofline flags (EXPERIMENTS.md §Roofline).
+
+    Contributions equal the token-granular kernel's exactly as a set; the
+    flash accumulation visits them in page order rather than Top-K order,
+    so outputs agree to allclose (the bit-identity pin lives on the XLA
+    serving path — sparse.dsa.dsa_sparse_attention_paged, which reorders
+    rows back to Top-K order).
+
+    Returns (B, H, DV) f32.
+    """
+    from repro.sparse.dsa import distinct_pages
+
+    b, h, d = q.shape
+    p_pages, page_size, kvh = k_pages.shape[:3]
+    dv = v_pages.shape[-1]
+    mp = table.shape[1]
+    n_logical = mp * page_size
+    kk = idx.shape[-1]
+    s_pages = min(kk, mp)
+    scale = scale if scale is not None else 1.0 / (d ** 0.5)
+
+    table = table.astype(jnp.int32)
+    idx = idx.astype(jnp.int32)
+
+    # descriptor build (XLA, O(K log K) per slot): distinct touched pages,
+    # padded table (sentinel page MP holds -1 = clips to page 0, masked),
+    # and the per-(descriptor, row) selection mask
+    li = jnp.clip(idx, 0, n_logical - 1)
+    up = distinct_pages(li, page_size=page_size, num_logical_pages=mp)
+    tpad = jnp.concatenate([table, jnp.full((b, 1), -1, jnp.int32)], axis=1)
+    uphys = jnp.take_along_axis(tpad, up, axis=1)                 # (B, S)
+    logical = (up[:, :, None] * page_size
+               + jnp.arange(page_size, dtype=jnp.int32)[None, None, :])
+    row_valid = ((up[:, :, None] < mp) & (uphys[:, :, None] >= 0)
+                 & jnp.any((idx[:, None, None, :] == logical[..., None])
+                           & (idx[:, None, None, :] >= 0), axis=-1))
+    row_valid = row_valid.astype(jnp.int32)                       # (B, S, ps)
+
+    def _page(i, j, tpad_ref, up_ref):
+        # whole-page DMA: the descriptor names the logical page, the padded
+        # table translates it (sentinel/unmapped clip to page 0 — every row
+        # masked in the body, never read semantically)
+        return (jnp.maximum(tpad_ref[i, up_ref[i, j]], 0),)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(b, s_pages),
+        in_specs=[
+            pl.BlockSpec((1, h, d), lambda i, j, t, u: (i, 0, 0)),
+            pl.BlockSpec((1, page_size, kvh, d),
+                         lambda i, j, t, u: _page(i, j, t, u) + (0, 0, 0)),
+            pl.BlockSpec((1, page_size, kvh, dv),
+                         lambda i, j, t, u: _page(i, j, t, u) + (0, 0, 0)),
+            pl.BlockSpec((1, 1, page_size), lambda i, j, t, u: (i, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, h, dv), lambda i, j, t, u: (i, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((h, 1), jnp.float32),
+            pltpu.VMEM((h, 1), jnp.float32),
+            pltpu.VMEM((h, dv), jnp.float32),
+        ],
+    )
+
+    kern = functools.partial(_paged_attn_pg_kernel, nsteps=s_pages,
+                             scale=scale, h=h, kvh=kvh, dv=dv,
+                             page_size=page_size)
+    out_shape = jax.ShapeDtypeStruct((b, h, dv), jnp.float32)
+    return pl.pallas_call(kern, grid_spec=grid_spec, out_shape=out_shape,
+                          interpret=interpret)(tpad, up, q, k_pages, v_pages,
+                                               row_valid)
+
+
+# --------------------------------------------------------------------------
+# Fused paged DENSE decode attention — the pre-DSA fallback's hot-spot
+# form: attend the full logical extent straight off the page pools.
+# --------------------------------------------------------------------------
+
+def _paged_dense_attn_kernel(table_ref, lengths_ref, q_ref, k_ref, v_ref,
+                             o_ref, m_scr, l_scr, acc_scr, *, nsteps, scale,
+                             h, kvh, dv, page_size, window):
+    b = pl.program_id(0)
+    j = pl.program_id(1)
+    g = h // kvh
+
+    @pl.when(j == 0)
+    def _():
+        m_scr[...] = jnp.full_like(m_scr[...], -jnp.inf)
+        l_scr[...] = jnp.zeros_like(l_scr[...])
+        acc_scr[...] = jnp.zeros_like(acc_scr[...])
+
+    q = q_ref[0].astype(jnp.float32)                     # (H, D)
+    kb = k_ref[0].astype(jnp.float32)                    # (page_size, KVH, D)
+    vb = v_ref[0].astype(jnp.float32)
+
+    # causal/window mask over GLOBAL positions — the only validity rule
+    # (mirroring layers.decode_attention_paged: unmapped pages sit beyond
+    # `length`, so the length mask subsumes the -1 sentinel)
+    ln = lengths_ref[b]
+    gpos = (jax.lax.broadcasted_iota(jnp.int32, (1, page_size), 1)[0]
+            + j * page_size)
+    valid = gpos < ln
+    if window is not None:
+        valid &= gpos > ln - 1 - window
+
+    qg = q.reshape(kvh, g, -1)
+    logits = jnp.einsum("khd,tkd->kht", qg, kb).reshape(h, page_size) * scale
+    logits = jnp.where(valid[None, :], logits, -jnp.inf)
+
+    m_prev = m_scr[...]
+    l_prev = l_scr[...]
+    m_new = jnp.maximum(m_prev, jnp.max(logits, axis=-1, keepdims=True))
+    m_safe = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+    alpha = jnp.where(jnp.isfinite(m_prev), jnp.exp(m_prev - m_safe), 0.0)
+    p = jnp.exp(jnp.where(jnp.isfinite(logits), logits - m_safe, -jnp.inf))
+    p = jnp.where(jnp.isfinite(logits), p, 0.0)
+    l_scr[...] = l_prev * alpha + jnp.sum(p, axis=-1, keepdims=True)
+    pv = jnp.einsum("kgt,tkd->kgd", p.reshape(kvh, g, page_size),
+                    vb).reshape(h, dv)
+    acc_scr[...] = acc_scr[...] * alpha + pv
+    m_scr[...] = m_new
+
+    @pl.when(j == nsteps - 1)
+    def _():
+        l = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0] = (acc_scr[...] / l).astype(o_ref.dtype)
+
+
+def paged_dense_decode_attn_pallas(q: jnp.ndarray, k_pages: jnp.ndarray,
+                                   v_pages: jnp.ndarray, table: jnp.ndarray,
+                                   lengths: jnp.ndarray, *,
+                                   scale: Optional[float] = None,
+                                   window: Optional[int] = None,
+                                   interpret: bool = True):
+    """Fused paged DENSE decode attention (the pre-DSA-gate fallback): one
+    query per slot attends its full causal extent straight off the page
+    pools. q: (B, H, D); k/v_pages: (P, page_size, KVH, D[v]); table:
+    (B, MP) block table; lengths: (B,) causal extents; `window` an optional
+    SWA width.
+
+    Grid (B, MP): each step DMAs slot b's j-th logical page WHOLE (the
+    scalar-prefetched table translates it; unmapped pages clip to page 0 —
+    dead under the length mask) and flash-accumulates all page_size rows
+    under the causal/window mask. Page-granular DMA is the natural shape
+    here — the dense extent touches every row of every mapped page — so
+    this kernel shares its descriptor economics with the pg sparse gather.
+
+    Returns (B, H, DV) f32.
+    """
+    b, h, d = q.shape
+    p_pages, page_size, kvh = k_pages.shape[:3]
+    dv = v_pages.shape[-1]
+    mp = table.shape[1]
+    scale = scale if scale is not None else 1.0 / (d ** 0.5)
+
+    table = table.astype(jnp.int32)
+    lengths = lengths.astype(jnp.int32)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(b, mp),
+        in_specs=[
+            pl.BlockSpec((1, h, d), lambda i, j, t, ln: (i, 0, 0)),
+            pl.BlockSpec((1, page_size, kvh, d),
+                         lambda i, j, t, ln: (jnp.maximum(t[i, j], 0), 0, 0, 0)),
+            pl.BlockSpec((1, page_size, kvh, dv),
+                         lambda i, j, t, ln: (jnp.maximum(t[i, j], 0), 0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, h, dv), lambda i, j, t, ln: (i, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((h, 1), jnp.float32),
+            pltpu.VMEM((h, 1), jnp.float32),
+            pltpu.VMEM((h, dv), jnp.float32),
+        ],
+    )
+
+    kern = functools.partial(_paged_dense_attn_kernel, nsteps=mp, scale=scale,
+                             h=h, kvh=kvh, dv=dv, page_size=page_size,
+                             window=window)
+    out_shape = jax.ShapeDtypeStruct((b, h, dv), jnp.float32)
+    return pl.pallas_call(kern, grid_spec=grid_spec, out_shape=out_shape,
+                          interpret=interpret)(table, lengths, q, k_pages,
+                                               v_pages)

@@ -93,11 +93,14 @@ class Model:
         return fn(self.cfg) if fn is not None else None
 
     def serve_step_paged(self, params, state, tokens, *, min_write_pos=None,
-                         paged_attn="fused", mesh=None, rules=None):
+                         paged_attn="fused", gather_granularity="token",
+                         mesh=None, rules=None):
         """One paged decode step. `paged_attn` selects the sparse-attention
         form: "fused" (block-table-native, O(K) gathered KV traffic —
         default) or "gather" (materialize the logical view first; the PR-2
-        oracle). Both are bit-identical — see transformer.serve_step_paged.
+        oracle). `gather_granularity` ("token" | "page") picks the DMA
+        shape of the fused sparse gather. All combinations are
+        bit-identical — see transformer.serve_step_paged.
         """
         fn = getattr(self.mod, "serve_step_paged", None)
         if fn is None:
@@ -105,15 +108,20 @@ class Model:
                 f"family {self.cfg.family!r} has no paged serve_step")
         return fn(params, state, tokens, self.cfg,
                   min_write_pos=min_write_pos, paged_attn=paged_attn,
+                  gather_granularity=gather_granularity,
                   mesh=mesh, rules=rules)
 
     def serve_step_spec_paged(self, params, state, tokens, *, draft_len,
                               max_accept, eos_id=-1, min_write_pos=None,
-                              paged_attn="fused", mesh=None, rules=None):
+                              paged_attn="fused", verify_kernel="scan",
+                              gather_granularity="token",
+                              mesh=None, rules=None):
         """Speculative verify tick (serve.spec subsystem): score all d+1
-        draft positions in one jitted scan of the paged step, greedy-accept
-        the longest matching prefix, and roll the decode state back to the
-        accepted point in-graph — see transformer.serve_step_spec_paged."""
+        draft positions, greedy-accept the longest matching prefix, and
+        roll the decode state back to the accepted point in-graph.
+        `verify_kernel` picks the verify body: "scan" (d+1 sequential
+        paged steps in one jitted scan) or "mq" (one multi-query-row
+        forward; bit-identical) — see transformer.serve_step_spec_paged."""
         fn = getattr(self.mod, "serve_step_spec_paged", None)
         if fn is None:
             raise NotImplementedError(
@@ -122,6 +130,8 @@ class Model:
         return fn(params, state, tokens, self.cfg, draft_len=draft_len,
                   max_accept=max_accept, eos_id=eos_id,
                   min_write_pos=min_write_pos, paged_attn=paged_attn,
+                  verify_kernel=verify_kernel,
+                  gather_granularity=gather_granularity,
                   mesh=mesh, rules=rules)
 
     # ---- sequence-sharded paged decode (SP-GVR serving path) ------------
@@ -162,9 +172,11 @@ class Model:
 
     def serve_step_sp_spec_paged(self, params, state, tokens, *, mesh,
                                  draft_len, max_accept, eos_id=-1,
-                                 min_write_pos=None, rules=None):
-        """Sequence-sharded speculative verify tick (one shard_map scanning
-        the per-device paged step over the d+1 draft positions) — see
+                                 min_write_pos=None, verify_kernel="scan",
+                                 rules=None):
+        """Sequence-sharded speculative verify tick (one shard_map over
+        the d+1 draft positions; `verify_kernel` picks the scan or the
+        batched mq body, bit-identical) — see
         transformer.serve_step_sp_spec_paged."""
         fn = getattr(self.mod, "serve_step_sp_spec_paged", None)
         if fn is None:
@@ -173,7 +185,8 @@ class Model:
                 f"speculative paged serve_step")
         return fn(params, state, tokens, self.cfg, mesh=mesh,
                   draft_len=draft_len, max_accept=max_accept, eos_id=eos_id,
-                  min_write_pos=min_write_pos, rules=rules)
+                  min_write_pos=min_write_pos, verify_kernel=verify_kernel,
+                  rules=rules)
 
     def serve_step(self, params, state, tokens, *, mesh=None, rules=None,
                    seq_sharded: bool = False):

@@ -169,6 +169,33 @@ def decode_attention(q, kcache, vcache, length, *, scale: float,
     return out.reshape(b, h, d)
 
 
+def decode_attention_paged(q, k_pages, v_pages, table, length, *, scale: float,
+                           window: Optional[int] = None, rules=None):
+    """Fused paged form of `decode_attention` — the dense pre-DSA fallback
+    without a caller-materialized logical view.
+
+    q: (B,H,D); k/v_pages: (P, page_size, KVH, D) global page pools;
+    table: (B, MP) int32 block table (-1 = unmapped); length: (B,).
+    The logical view is built from the block table here (unmapped entries
+    clip to page 0 — their positions lie at or beyond `length`, so the
+    length/window mask kills them) and runs through the exact
+    `decode_attention` reduction, so it is bit-identical to calling
+    `decode_attention` over a caller-gathered view of the same pools. The
+    Pallas hot-spot form (whole-page DMA + flash accumulation) is
+    `kernels.paged_dense_decode_attn`.
+    """
+    from repro.parallel.sharding import constrain
+    p, page_size = k_pages.shape[:2]
+    b, mp = table.shape
+    gather = jnp.clip(table, 0, p - 1)
+    kc = k_pages[gather].reshape((b, mp * page_size) + k_pages.shape[2:])
+    vc = v_pages[gather].reshape((b, mp * page_size) + v_pages.shape[2:])
+    kc = constrain(kc, rules, "batch", None, None, None)
+    vc = constrain(vc, rules, "batch", None, None, None)
+    return decode_attention(q, kc, vc, length, scale=scale, window=window,
+                            rules=rules)
+
+
 # --------------------------------------------------------------------------
 # MLP + MoE (expert-parallel all_to_all)
 # --------------------------------------------------------------------------

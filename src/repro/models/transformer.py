@@ -29,7 +29,7 @@ from repro.parallel.sharding import MeshRules, constrain
 from repro.sparse import dsa as dsa_mod
 from .config import ModelConfig
 from .layers import (apply_rotary, blockwise_causal_attention, decode_attention,
-                     moe_mlp_ep, rms_norm, swiglu_mlp)
+                     decode_attention_paged, moe_mlp_ep, rms_norm, swiglu_mlp)
 
 
 def _norm_init(d):
@@ -320,7 +320,8 @@ def _project_qkv(p, h, b, positions, cfg: ModelConfig, rules):
 
 
 def _attend_decode(p, h, q, kc, vc, idx_kc, prev_topk, topk_valid, new_len,
-                   cfg: ModelConfig, use_dsa: bool, rules, mesh, paged=None):
+                   cfg: ModelConfig, use_dsa: bool, rules, mesh, paged=None,
+                   gather_granularity: str = "token"):
     """Shared decode-attention core.
 
     Scoring/selection always run over a *logical* contiguous indexer view:
@@ -348,7 +349,7 @@ def _attend_decode(p, h, q, kc, vc, idx_kc, prev_topk, topk_valid, new_len,
             kp, vp, table = paged
             res = dsa_mod.dsa_decode_paged(
                 q, kp, vp, table, p["indexer"], h, idx_kc, prev_topk,
-                new_len, **dsa_kw)
+                new_len, gather_granularity=gather_granularity, **dsa_kw)
         else:
             res = dsa_mod.dsa_decode(
                 q, kc, vc, p["indexer"], h, idx_kc, prev_topk, new_len,
@@ -360,6 +361,19 @@ def _attend_decode(p, h, q, kc, vc, idx_kc, prev_topk, topk_valid, new_len,
             out["topk_valid"] = jnp.ones_like(topk_valid)
             out["sel_gvr"] = (res.gvr_rows if res.gvr_rows is not None
                               else jnp.ones_like(topk_valid))
+    elif paged is not None:
+        # fused dense pre-DSA fallback: attend over the full logical extent
+        # straight off the page pools (bit-identical to gathering the view
+        # first — see layers.decode_attention_paged)
+        kp, vp, table = paged
+        attn = decode_attention_paged(q, kp, vp, table, new_len,
+                                      scale=hd ** -0.5,
+                                      window=cfg.swa_window, rules=rules)
+        if prev_topk is not None:
+            out["prev_topk"] = prev_topk
+            if topk_valid is not None:
+                out["topk_valid"] = topk_valid
+                out["sel_gvr"] = jnp.zeros_like(topk_valid)
     else:
         attn = decode_attention(q, kc, vc, new_len, scale=hd ** -0.5,
                                 window=cfg.swa_window)
@@ -777,6 +791,7 @@ def paged_state_batch_axes(cfg: ModelConfig) -> Dict[str, int]:
 def serve_step_paged(params, state, tokens, cfg: ModelConfig, *,
                      min_write_pos: Optional[jnp.ndarray] = None,
                      paged_attn: str = "fused",
+                     gather_granularity: str = "token",
                      mesh=None, rules: Optional[MeshRules] = None):
     """One paged decode step. tokens: (B,) int32. Returns (logits, state).
 
@@ -804,6 +819,12 @@ def serve_step_paged(params, state, tokens, cfg: ModelConfig, *,
 
     Either way the prev-Top-K feedback stays in logical token space, so
     warm/cold dispatch and the dense-layout bit-exactness are untouched.
+
+    `gather_granularity` ("token" | "page") picks the DMA shape of the
+    fused sparse gather: token-granular moves one row per Top-K entry,
+    page-granular moves each distinct touched page whole and slices rows
+    out in fast memory — coarser descriptors, bit-identical output
+    (sparse.dsa.dsa_sparse_attention_paged).
     """
     b = tokens.shape[0]
     hd = cfg.hd
@@ -838,9 +859,11 @@ def serve_step_paged(params, state, tokens, cfg: ModelConfig, *,
         raise ValueError(f"unknown paged_attn {paged_attn!r} "
                          f"(expected 'fused' or 'gather')")
     use_dsa = cfg.dsa.enabled and n > cfg.dsa.min_n
-    # the fused form only applies to the sparse (DSA) stage; the dense
-    # fallback attends over every cached row, which *is* the logical view
-    fused = paged_attn == "fused" and use_dsa
+    # fused covers both attention forms: the sparse (DSA) stage gathers its
+    # Top-K rows from the pools, and the dense pre-DSA fallback attends the
+    # full logical extent through decode_attention_paged — either way the
+    # step never materializes the K/V logical views itself
+    fused = paged_attn == "fused"
 
     def layer(x, carry):
         p = carry["p"]
@@ -876,7 +899,8 @@ def serve_step_paged(params, state, tokens, cfg: ModelConfig, *,
         attn, extras = _attend_decode(p, h, q, kc, vc, idx_kc, prev_topk,
                                       topk_valid, new_len, cfg, use_dsa,
                                       rules, mesh,
-                                      paged=(kp, vp, table) if fused else None)
+                                      paged=(kp, vp, table) if fused else None,
+                                      gather_granularity=gather_granularity)
         out.update(extras)
         attn = attn.reshape(b, cfg.n_heads * hd).astype(x.dtype)
         x = x + attn @ p["wo"]
@@ -992,7 +1016,24 @@ def _spec_verify_scan(step_fn, state, tokens, draft_len, max_accept,
 
     xs = (jnp.arange(d1, dtype=jnp.int32), tokens.T)
     end_state, ys = jax.lax.scan(body, state, xs)
+    return _spec_accept_rollback(length0, end_state, ys, tokens, draft_len,
+                                 max_accept, eos_id, dsa_enabled)
 
+
+def _spec_accept_rollback(length0, end_state, ys, tokens, draft_len,
+                          max_accept, eos_id: int, dsa_enabled: bool):
+    """Greedy acceptance + exact in-graph rollback from the per-position
+    verify stacks. Shared verbatim by the scan and mq verify forms — having
+    ONE copy of this arithmetic is what guarantees the two verify kernels
+    agree on every accept/reject/eos trace whenever their stacks agree.
+
+    ys: {"logits": (D+1, B, V)} plus, when DSA state is carried,
+    per-position stacks "prev_topk" (D+1, L, B, K) and "topk_valid" /
+    "sel_gvr" (D+1, L, B) — RAW (unmerged) values; entry j is only ever
+    selected for rows whose position j really executed (accept_len <=
+    draft_len). Returns the serve_step_spec_paged 5-tuple.
+    """
+    b, d1 = tokens.shape
     logits_all = ys["logits"]                          # (D+1, B, V)
     argmax_all = jnp.argmax(logits_all, axis=-1).astype(jnp.int32)
     if d1 > 1:
@@ -1031,16 +1072,219 @@ def _spec_verify_scan(step_fn, state, tokens, draft_len, max_accept,
             sel_pos, new_state)
 
 
+def _paged_verify_mq(params, state, tokens, cfg: ModelConfig, *, draft_len,
+                     base_mwp, paged_attn: str, gather_granularity: str,
+                     mesh, rules):
+    """Multi-query-row verify body (`verify_kernel="mq"`): all d+1 verify
+    positions of every slot run as one batched forward instead of a scan of
+    d+1 single-token steps — the XLA form of the Pallas mq hot-spot kernels
+    (`kernels.paged_sparse_decode_attn_mq` / `paged_indexer_topk_mq`).
+
+    Per layer: every position's K/V/indexer-K rows scatter FIRST (position
+    j at `length0 + j`; frozen/masked rows to the sink page), then Top-K
+    selection runs as a chain over the Q axis — row 0 warms from the
+    incoming prev-Top-K, row j+1 from row j's selection, exactly the
+    causally-extended GVR feedback the scan threads through its carry —
+    and attention over all (B, Q) selections is ONE multi-query launch
+    (`dsa_sparse_attention_paged_mq`).
+
+    Bit-identity with the scan form: position j's consumers all mask
+    beyond their own causal extent `length0 + j + 1` (indexer scores,
+    sparse-attention validity, the dense fallback's length mask), and the
+    NEG/-inf sentinels zero masked contributions exactly in f32, so the
+    rows written by later positions — fresh here, stale under the scan —
+    are arithmetically invisible; everything inside the extent was written
+    by earlier positions identically in both forms. Frozen rows (j >
+    draft_len) compute garbage at advanced positions (the scan computes
+    different garbage at frozen positions) — their stack entries are never
+    selected by the rollback (accept_len <= draft_len) and frozen eos
+    argmaxes can never lower accept_len below a live position's, so the
+    accept/rollback arithmetic sees identical inputs wherever it looks.
+
+    Returns (ys, end_state) in `_spec_verify_scan`'s stack format, ready
+    for `_spec_accept_rollback`.
+    """
+    b, d1 = tokens.shape
+    hd = cfg.hd
+    length0 = state["length"]
+    table = state["page_table"]
+    page_size = state["k_pages"].shape[2]
+    sink = state["k_pages"].shape[1] - 1
+    mp = table.shape[1]
+    n = mp * page_size
+    use_dsa = cfg.dsa.enabled and n > cfg.dsa.min_n
+    if paged_attn not in ("fused", "gather"):
+        raise ValueError(f"unknown paged_attn {paged_attn!r} "
+                         f"(expected 'fused' or 'gather')")
+    fused = paged_attn == "fused"
+
+    jj = jnp.arange(d1, dtype=jnp.int32)
+    positions = length0[:, None] + jj[None, :]           # (B, Q)
+    lengths_q = positions + 1                            # causal extents
+    live = jj[None, :] <= draft_len[:, None]             # (B, Q)
+    flat_pos = positions.reshape(b * d1)
+
+    off = positions % page_size
+    phys = jnp.take_along_axis(table, positions // page_size, axis=1)
+    writable = live & (phys >= 0) & (positions >= base_mwp[:, None])
+    dest = jnp.where(writable, phys, sink)
+    gather = jnp.clip(table, 0, sink)
+
+    x = params["embed"][tokens]                          # (B, Q, D)
+    x = constrain(x, rules, "batch", None, "d_model")
+
+    def layer(x, carry):
+        p = carry["p"]
+        kp, vp = carry["k_pages"], carry["v_pages"]
+        idx_kp = carry.get("idx_k_pages")
+        prev_topk = carry.get("prev_topk")               # (B, K)
+        topk_valid = carry.get("topk_valid")             # (B,)
+        h = rms_norm(x, p["ln1"])                        # (B, Q, D)
+        hf = h.reshape(b * d1, -1)
+        q, kn, vn = _project_qkv(p, hf, b * d1, flat_pos, cfg, rules)
+        q = q.reshape(b, d1, cfg.n_heads, hd)
+        kn = kn.reshape(b, d1, cfg.n_kv_heads, hd)
+        vn = vn.reshape(b, d1, cfg.n_kv_heads, hd)
+        # all Q rows write before anything attends — safe because every
+        # consumer masks beyond its own extent (see docstring)
+        kp = kp.at[dest, off].set(kn.astype(kp.dtype))
+        vp = vp.at[dest, off].set(vn.astype(vp.dtype))
+
+        out = {"k_pages": kp, "v_pages": vp}
+        if use_dsa:
+            ik = dsa_mod.indexer_k(p["indexer"], hf, flat_pos,
+                                   dim=cfg.dsa.indexer_dim,
+                                   rope_base=cfg.rope_base)
+            ik = ik.reshape(b, d1, cfg.dsa.indexer_dim)
+            idx_kp = idx_kp.at[dest, off].set(ik.astype(idx_kp.dtype))
+            idx_kc = idx_kp[gather].reshape(b, n, cfg.dsa.indexer_dim)
+
+            # the per-row Top-K chain: the mq indexer kernel's VMEM
+            # feedback threading, in XLA form — selection is inherently
+            # sequential over Q (row j warms row j+1)
+            def sel_row(cr, inp):
+                prev, valid = cr
+                h_j, len_j = inp
+                sel = dsa_mod.dsa_select(
+                    p["indexer"], h_j, idx_kc, prev, len_j,
+                    k=prev.shape[-1], heads=cfg.dsa.indexer_heads,
+                    dim=cfg.dsa.indexer_dim, rope_base=cfg.rope_base,
+                    selector=cfg.dsa.selector, prev_valid=valid,
+                    max_candidates=cfg.dsa.max_candidates,
+                    gate_max_n=cfg.dsa.gate_max_n, min_n=cfg.dsa.min_n,
+                    swa_window=cfg.swa_window, rules=rules, mesh=mesh)
+                gvr = (sel.gvr_rows if sel.gvr_rows is not None
+                       else jnp.ones_like(valid))
+                return (sel.indices, jnp.ones_like(valid)), (sel.indices, gvr)
+
+            _, (idx_all, gvr_all) = jax.lax.scan(
+                sel_row, (prev_topk, topk_valid),
+                (jnp.swapaxes(h, 0, 1), jnp.swapaxes(lengths_q, 0, 1)))
+            idx_q = jnp.swapaxes(idx_all, 0, 1)          # (B, Q, K)
+            if fused:
+                attn = dsa_mod.dsa_sparse_attention_paged_mq(
+                    q, kp, vp, table, idx_q, lengths_q, scale=hd ** -0.5,
+                    granularity=gather_granularity, rules=rules)
+            else:
+                kc = kp[gather].reshape(b, n, cfg.n_kv_heads, hd)
+                vc = vp[gather].reshape(b, n, cfg.n_kv_heads, hd)
+                attn = dsa_mod.dsa_sparse_attention(
+                    q.reshape(b * d1, cfg.n_heads, hd),
+                    jnp.repeat(kc, d1, axis=0), jnp.repeat(vc, d1, axis=0),
+                    idx_q.reshape(b * d1, -1), lengths_q.reshape(b * d1),
+                    scale=hd ** -0.5, rules=rules)
+                attn = attn.reshape(b, d1, cfg.n_heads, hd)
+            out["sel_idx"] = idx_all                      # (Q, B, K)
+            out["sel_gvr"] = gvr_all                      # (Q, B)
+            out["sel_valid"] = jnp.ones((d1,) + topk_valid.shape, bool)
+        else:
+            qf = q.reshape(b * d1, cfg.n_heads, hd)
+            lf = lengths_q.reshape(b * d1)
+            if fused:
+                attn = decode_attention_paged(
+                    qf, kp, vp, jnp.repeat(table, d1, axis=0), lf,
+                    scale=hd ** -0.5, window=cfg.swa_window, rules=rules)
+            else:
+                kc = kp[gather].reshape(b, n, cfg.n_kv_heads, hd)
+                vc = vp[gather].reshape(b, n, cfg.n_kv_heads, hd)
+                attn = decode_attention(
+                    qf, jnp.repeat(kc, d1, axis=0),
+                    jnp.repeat(vc, d1, axis=0), lf,
+                    scale=hd ** -0.5, window=cfg.swa_window)
+            attn = attn.reshape(b, d1, cfg.n_heads, hd)
+            if prev_topk is not None:
+                # pre-gate passthrough: the scan stacks the same incoming
+                # feedback at every position
+                out["sel_idx"] = jnp.broadcast_to(
+                    prev_topk[None], (d1,) + prev_topk.shape)
+                out["sel_valid"] = jnp.broadcast_to(
+                    topk_valid[None], (d1,) + topk_valid.shape)
+                out["sel_gvr"] = jnp.zeros((d1,) + topk_valid.shape, bool)
+        if idx_kp is not None:
+            out["idx_k_pages"] = idx_kp
+
+        attn = attn.reshape(b, d1, cfg.n_heads * hd).astype(x.dtype)
+        x = x + attn @ p["wo"]
+        h2 = rms_norm(x, p["ln2"])
+        if cfg.moe.num_experts:
+            # MoE per position with the scan's (B, 1, D) call shape —
+            # routing/capacity must see the same token batch per call
+            mo = jax.lax.map(lambda hh: _mlp(p, hh[:, None, :], cfg, mesh)[:, 0],
+                             jnp.swapaxes(h2, 0, 1))
+            m = jnp.swapaxes(mo, 0, 1)
+        else:
+            m = _mlp(p, h2, cfg, mesh)
+        x = x + m
+        x = constrain(x, rules, "batch", None, "d_model")
+        return x, out
+
+    carry_in = {"p": params["layers"], "k_pages": state["k_pages"],
+                "v_pages": state["v_pages"]}
+    if cfg.dsa.enabled:
+        carry_in["idx_k_pages"] = state["idx_k_pages"]
+        carry_in["prev_topk"] = state["prev_topk"]
+        carry_in["topk_valid"] = state["topk_valid"]
+    x, outs = jax.lax.scan(layer, x, carry_in)
+
+    x = rms_norm(x, params["final_norm"])
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = (x @ head).astype(jnp.float32)              # (B, Q, V)
+
+    ys = {"logits": jnp.transpose(logits, (1, 0, 2))}    # (D+1, B, V)
+    if cfg.dsa.enabled:
+        ys["prev_topk"] = jnp.swapaxes(outs["sel_idx"], 0, 1)   # (Q, L, B, K)
+        ys["topk_valid"] = jnp.swapaxes(outs["sel_valid"], 0, 1)
+        ys["sel_gvr"] = jnp.swapaxes(outs["sel_gvr"], 0, 1)
+    end_state = dict(state)
+    end_state["k_pages"] = outs["k_pages"]
+    end_state["v_pages"] = outs["v_pages"]
+    if cfg.dsa.enabled:
+        end_state["idx_k_pages"] = outs["idx_k_pages"]
+    return ys, end_state
+
+
 def serve_step_spec_paged(params, state, tokens, cfg: ModelConfig, *,
                           draft_len, max_accept, eos_id: int = -1,
                           min_write_pos: Optional[jnp.ndarray] = None,
                           paged_attn: str = "fused",
+                          verify_kernel: str = "scan",
+                          gather_granularity: str = "token",
                           mesh=None, rules: Optional[MeshRules] = None):
     """Speculative verify tick over the paged layout: score all d+1 draft
-    positions through `serve_step_paged` in one jitted scan, accept the
-    longest matching greedy prefix, and roll the decode state back to the
-    accepted point in-graph (see the section comment above for the exact
-    semantics and the bit-identity argument). tokens: (B, D+1) int32.
+    positions, accept the longest matching greedy prefix, and roll the
+    decode state back to the accepted point in-graph (see the section
+    comment above for the exact semantics and the bit-identity argument).
+    tokens: (B, D+1) int32.
+
+    `verify_kernel` picks the verify body — both are bit-identical in
+    tokens, accept traces, feedback buffers and telemetry (shared
+    `_spec_accept_rollback` arithmetic over provably-equal stacks):
+
+    * "scan" — d+1 sequential `serve_step_paged` calls inside one jitted
+      lax.scan (the PR-5 form; the reference).
+    * "mq" — one multi-query-row forward: batched writes, the chained
+      Top-K warm start, and ONE mq attention launch per layer
+      (`_paged_verify_mq` — the served form of the Pallas mq kernels).
 
     Returns (out_tokens (B, D+1), accept_len (B,), logits_all (B, D+1, V),
     sel_gvr_pos (B, D+1), new_state).
@@ -1048,41 +1292,219 @@ def serve_step_spec_paged(params, state, tokens, cfg: ModelConfig, *,
     b = tokens.shape[0]
     base_mwp = (min_write_pos if min_write_pos is not None
                 else jnp.zeros((b,), jnp.int32))
+    if verify_kernel not in ("scan", "mq"):
+        raise ValueError(f"unknown verify_kernel {verify_kernel!r} "
+                         f"(expected 'scan' or 'mq')")
+    draft_len = jnp.asarray(draft_len, jnp.int32)
+    max_accept = jnp.asarray(max_accept, jnp.int32)
+
+    if verify_kernel == "mq":
+        ys, end_state = _paged_verify_mq(
+            params, state, tokens, cfg, draft_len=draft_len,
+            base_mwp=base_mwp, paged_attn=paged_attn,
+            gather_granularity=gather_granularity, mesh=mesh, rules=rules)
+        return _spec_accept_rollback(state["length"], end_state, ys, tokens,
+                                     draft_len, max_accept, int(eos_id),
+                                     cfg.dsa.enabled)
 
     def step_fn(st, tok, mwp):
         return serve_step_paged(params, st, tok, cfg, min_write_pos=mwp,
-                                paged_attn=paged_attn, mesh=mesh, rules=rules)
+                                paged_attn=paged_attn,
+                                gather_granularity=gather_granularity,
+                                mesh=mesh, rules=rules)
 
-    return _spec_verify_scan(step_fn, state, tokens,
-                             jnp.asarray(draft_len, jnp.int32),
-                             jnp.asarray(max_accept, jnp.int32),
+    return _spec_verify_scan(step_fn, state, tokens, draft_len, max_accept,
                              int(eos_id), base_mwp,
                              paged_state_batch_axes(cfg), cfg.dsa.enabled)
+
+
+def _sp_paged_verify_mq_body(params, state, tokens, draft_len, max_accept,
+                             base_mwp, cfg: ModelConfig, *, eos_id: int,
+                             seq_axis: str):
+    """Per-device mq verify body (`verify_kernel="mq"` under sequence
+    sharding) — `_paged_verify_mq` restructured over the shard-local page
+    pools, running inside the `serve_step_sp_spec_paged` shard_map.
+
+    Per layer: ALL d+1 positions' projections run batched and their
+    K/V/indexer-K rows scatter into whichever shard owns each position
+    (frozen/masked rows to the local sink), then the shard-local logical
+    indexer view is built once and the Top-K chain + attention run per
+    query row (`sp_dsa_decode_paged_local` — selection is inherently
+    sequential over Q, and the O(K)-psum collective schedule is per-row,
+    so the tick's collective count matches the scan form's d+1 schedules;
+    the win is the batched projection/write work). Bit-identity with the
+    scan form follows the single-device mq argument: every consumer masks
+    beyond its own causal extent, so later-position rows — fresh here,
+    stale under the scan — contribute exactly zero, and frozen rows'
+    garbage stacks are never selected by the shared rollback arithmetic.
+
+    Returns the serve_step_spec_paged 5-tuple (replicated outputs + the
+    per-shard end state), via `_spec_accept_rollback`.
+    """
+    from repro.sparse import sp_dsa as sp_dsa_mod
+    from repro.parallel.sharding import axis_size
+
+    b, d1 = tokens.shape
+    hd = cfg.hd
+    never = jnp.int32(PAGED_NEVER_WRITE)
+    length0 = state["length"]
+    ppl = state["k_pages"].shape[2] - 1                  # pages per shard
+    page_size = state["k_pages"].shape[3]
+    mp = state["page_table"].shape[1]
+    num_shards = axis_size(seq_axis)
+    mp_local = mp // num_shards
+    n_local = mp_local * page_size
+    kk = state["prev_topk"].shape[-1]
+
+    my = jax.lax.axis_index(seq_axis)
+    shard_offset = (my * n_local).astype(jnp.int32)
+    table = state["page_table"]
+    table_local = jax.lax.dynamic_slice_in_dim(
+        table, my * mp_local, mp_local, axis=1)
+    sink = ppl
+
+    jj = jnp.arange(d1, dtype=jnp.int32)
+    positions = length0[:, None] + jj[None, :]           # (B, Q)
+    lengths_q = positions + 1
+    live = jj[None, :] <= draft_len[:, None]
+    mwp_q = jnp.where(live, base_mwp[:, None], never)
+    flat_pos = positions.reshape(b * d1)
+
+    owner = ((positions >= shard_offset)
+             & (positions < shard_offset + n_local))
+    rel = jnp.clip(positions - shard_offset, 0, n_local - 1)
+    phys = jnp.take_along_axis(table_local, rel // page_size, axis=1)
+    writable = owner & (phys >= 0) & (positions >= mwp_q)
+    dest = jnp.where(writable, phys, sink)
+    off = positions % page_size
+    gather_local = jnp.clip(table_local, 0, sink)
+
+    x = params["embed"][tokens]                          # (B, Q, D)
+
+    def layer(x, carry):
+        p = carry["p"]
+        kp, vp = carry["k_pages"], carry["v_pages"]
+        idx_kp = carry["idx_k_pages"]
+        prev_topk = carry["prev_topk"]                   # (B, K)
+        topk_valid = carry.get("topk_valid")             # (B,)
+        h = rms_norm(x, p["ln1"])                        # (B, Q, D)
+        hf = h.reshape(b * d1, -1)
+        q, kn, vn = _project_qkv(p, hf, b * d1, flat_pos, cfg, None)
+        q = q.reshape(b, d1, cfg.n_heads, hd)
+        kn = kn.reshape(b, d1, cfg.n_kv_heads, hd)
+        vn = vn.reshape(b, d1, cfg.n_kv_heads, hd)
+        kp = kp.at[dest, off].set(kn.astype(kp.dtype))
+        vp = vp.at[dest, off].set(vn.astype(vp.dtype))
+        ik = dsa_mod.indexer_k(p["indexer"], hf, flat_pos,
+                               dim=cfg.dsa.indexer_dim,
+                               rope_base=cfg.rope_base)
+        ik = ik.reshape(b, d1, cfg.dsa.indexer_dim)
+        idx_kp = idx_kp.at[dest, off].set(ik.astype(idx_kp.dtype))
+        idx_kc = idx_kp[gather_local].reshape(b, n_local,
+                                              cfg.dsa.indexer_dim)
+
+        def sel_row(cr, inp):
+            prev, valid = cr
+            q_j, h_j, len_j = inp
+            res = sp_dsa_mod.sp_dsa_decode_paged_local(
+                q_j, kp, vp, table_local, p["indexer"], h_j, idx_kc,
+                prev, valid, len_j,
+                k=kk, scale=hd ** -0.5, heads=cfg.dsa.indexer_heads,
+                dim=cfg.dsa.indexer_dim, rope_base=cfg.rope_base,
+                shard_offset=shard_offset, page_size=page_size,
+                max_candidates=cfg.dsa.max_candidates,
+                swa_window=cfg.swa_window, seq_axis=seq_axis)
+            return ((res.new_topk, jnp.ones_like(valid)),
+                    (res.attn_out, res.new_topk, res.gvr_rows))
+
+        valid0 = (topk_valid if topk_valid is not None
+                  else jnp.ones((b,), bool))
+        _, (attn_all, idx_all, gvr_all) = jax.lax.scan(
+            sel_row, (prev_topk, valid0),
+            (jnp.swapaxes(q, 0, 1), jnp.swapaxes(h, 0, 1),
+             jnp.swapaxes(lengths_q, 0, 1)))
+
+        out = {"k_pages": kp, "v_pages": vp, "idx_k_pages": idx_kp,
+               "sel_idx": idx_all,                       # (Q, B, K)
+               "sel_valid": jnp.ones((d1, b), bool),
+               "sel_gvr": gvr_all}                       # (Q, B)
+        attn = jnp.swapaxes(attn_all, 0, 1)              # (B, Q, H, HD)
+        attn = attn.reshape(b, d1, cfg.n_heads * hd).astype(x.dtype)
+        x = x + attn @ p["wo"]
+        h2 = rms_norm(x, p["ln2"])
+        if cfg.moe.num_experts:
+            mo = jax.lax.map(
+                lambda hh: _mlp(p, hh[:, None, :], cfg, None)[:, 0],
+                jnp.swapaxes(h2, 0, 1))
+            m = jnp.swapaxes(mo, 0, 1)
+        else:
+            m = _mlp(p, h2, cfg, None)
+        x = x + m
+        return x, out
+
+    carry_in = {"p": params["layers"],
+                "k_pages": state["k_pages"][:, 0],
+                "v_pages": state["v_pages"][:, 0],
+                "idx_k_pages": state["idx_k_pages"][:, 0],
+                "prev_topk": state["prev_topk"]}
+    if "topk_valid" in state:
+        carry_in["topk_valid"] = state["topk_valid"]
+    x, outs = jax.lax.scan(layer, x, carry_in)
+
+    x = rms_norm(x, params["final_norm"])
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = (x @ head).astype(jnp.float32)              # (B, Q, V)
+
+    ys = {"logits": jnp.transpose(logits, (1, 0, 2)),
+          "prev_topk": jnp.swapaxes(outs["sel_idx"], 0, 1),
+          "topk_valid": jnp.swapaxes(outs["sel_valid"], 0, 1),
+          "sel_gvr": jnp.swapaxes(outs["sel_gvr"], 0, 1)}
+    end_state = dict(state)
+    for key in ("k_pages", "v_pages", "idx_k_pages"):
+        end_state[key] = outs[key][:, None]              # restore shard axis
+    return _spec_accept_rollback(length0, end_state, ys, tokens, draft_len,
+                                 max_accept, eos_id, True)
 
 
 def serve_step_sp_spec_paged(params, state, tokens, cfg: ModelConfig, *,
                              mesh, draft_len, max_accept, eos_id: int = -1,
                              min_write_pos: Optional[jnp.ndarray] = None,
+                             verify_kernel: str = "scan",
                              seq_axis: str = "seq",
                              rules: Optional[MeshRules] = None):
-    """Sequence-sharded speculative verify tick: the same verify scan as
-    `serve_step_spec_paged`, but each per-token step is the per-device
-    sharded body (`_sp_paged_token_body`) and the whole scan — including
-    the in-graph acceptance/rollback, which is replicated arithmetic —
-    runs inside ONE shard_map over the mesh's `seq_axis`. Per position the
-    collective schedule is exactly the non-speculative sharded step's
-    (O(1) in context length), so a verify tick costs d+1 of those
-    schedules and nothing more. Bit-identical to the single-device
+    """Sequence-sharded speculative verify tick: the same verify semantics
+    as `serve_step_spec_paged`, with the per-device sharded body
+    (`_sp_paged_token_body`) and the whole verify — including the in-graph
+    acceptance/rollback, which is replicated arithmetic — inside ONE
+    shard_map over the mesh's `seq_axis`. Per position the collective
+    schedule is exactly the non-speculative sharded step's (O(1) in
+    context length), so a verify tick costs d+1 of those schedules and
+    nothing more. Bit-identical to the single-device
     `serve_step_spec_paged` over the same logical cache content, which is
     what pins spec == non-spec on sharded meshes (tests/test_spec.py).
+
+    `verify_kernel` picks the verify body, as in the single-device step:
+    "scan" runs d+1 sequential sharded token steps; "mq" batches each
+    layer's projections/writes across all positions and chains selection
+    per row (`_sp_paged_verify_mq_body`) — bit-identical in tokens,
+    accept traces, feedback and telemetry.
     """
     b = tokens.shape[0]
     _sp_paged_validate(state, cfg, mesh, seq_axis)
+    if verify_kernel not in ("scan", "mq"):
+        raise ValueError(f"unknown verify_kernel {verify_kernel!r} "
+                         f"(expected 'scan' or 'mq')")
     base_mwp = (min_write_pos if min_write_pos is not None
                 else jnp.zeros((b,), jnp.int32))
     axes = sp_paged_state_batch_axes(cfg)
 
     def body(params, state, tokens, draft_len, max_accept, base_mwp):
+        if verify_kernel == "mq":
+            return _sp_paged_verify_mq_body(params, state, tokens,
+                                            draft_len, max_accept, base_mwp,
+                                            cfg, eos_id=int(eos_id),
+                                            seq_axis=seq_axis)
+
         def step_fn(st, tok, mwp):
             return _sp_paged_token_body(params, st, tok, mwp, cfg,
                                         seq_axis=seq_axis)

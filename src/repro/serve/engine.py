@@ -243,13 +243,31 @@ class DecodeEngine:
                  eos_id: Optional[int] = None, record_logits: bool = False,
                  kv_layout: str = "dense", page_size: int = 16,
                  num_pages: Optional[int] = None, prefix_caching: bool = True,
-                 paged_attn: str = "fused", seq_shards: int = 1, mesh=None,
-                 spec_depth: int = 0, drafter=None):
+                 paged_attn: str = "fused", gather_granularity: str = "token",
+                 seq_shards: int = 1, mesh=None,
+                 spec_depth: int = 0, drafter=None,
+                 verify_kernel: str = "scan"):
         if kv_layout not in ("dense", "paged"):
             raise ValueError(f"unknown kv_layout {kv_layout!r}")
         if paged_attn not in ("fused", "gather"):
             raise ValueError(f"unknown paged_attn {paged_attn!r} "
                              f"(expected 'fused' or 'gather')")
+        if gather_granularity not in ("token", "page"):
+            raise ValueError(f"unknown gather_granularity "
+                             f"{gather_granularity!r} "
+                             f"(expected 'token' or 'page')")
+        if gather_granularity == "page" and kv_layout != "paged":
+            raise ValueError(
+                "gather_granularity='page' requires kv_layout='paged' "
+                "(page-granular DMA addresses the page pools)")
+        if gather_granularity == "page" and seq_shards > 1:
+            raise ValueError(
+                "gather_granularity='page' is not supported under "
+                "seq_shards > 1: the sharded attention assembles selected "
+                "rows via the O(K) psum, not the paged gather")
+        if verify_kernel not in ("scan", "mq"):
+            raise ValueError(f"unknown verify_kernel {verify_kernel!r} "
+                             f"(expected 'scan' or 'mq')")
         if spec_depth < 0:
             raise ValueError(f"spec_depth must be >= 0, got {spec_depth}")
         if spec_depth > 0 and kv_layout != "paged":
@@ -267,6 +285,8 @@ class DecodeEngine:
         self.record_logits = record_logits
         self.kv_layout = kv_layout
         self.paged_attn = paged_attn
+        self.gather_granularity = gather_granularity
+        self.verify_kernel = verify_kernel
         self.seq_shards = int(seq_shards)
         self.mesh = mesh
         self.scheduler: Scheduler = (scheduler if isinstance(scheduler, Scheduler)
@@ -413,9 +433,10 @@ class DecodeEngine:
                 params, state, tokens, min_write_pos=min_write_pos,
                 mesh=self.mesh)
         if self.kv is not None:
-            return self.model.serve_step_paged(params, state, tokens,
-                                               min_write_pos=min_write_pos,
-                                               paged_attn=self.paged_attn)
+            return self.model.serve_step_paged(
+                params, state, tokens, min_write_pos=min_write_pos,
+                paged_attn=self.paged_attn,
+                gather_granularity=self.gather_granularity)
         return self.model.serve_step(params, state, tokens)
 
     def _merge_active(self, new_state, state, active):
@@ -458,12 +479,14 @@ class DecodeEngine:
         if self.seq_shards > 1:
             out = self.model.serve_step_sp_spec_paged(
                 params, state, tokens, mesh=self.mesh, draft_len=draft_len,
-                max_accept=max_accept, eos_id=eos, min_write_pos=mwp)
+                max_accept=max_accept, eos_id=eos, min_write_pos=mwp,
+                verify_kernel=self.verify_kernel)
         else:
             out = self.model.serve_step_spec_paged(
                 params, state, tokens, draft_len=draft_len,
                 max_accept=max_accept, eos_id=eos, min_write_pos=mwp,
-                paged_attn=self.paged_attn)
+                paged_attn=self.paged_attn, verify_kernel=self.verify_kernel,
+                gather_granularity=self.gather_granularity)
         out_tokens, accept_len, logits_all, sel_pos, new_state = out
         merged = self._merge_active(new_state, state, active)
         return merged, out_tokens, accept_len, logits_all, sel_pos
@@ -754,19 +777,38 @@ class DecodeEngine:
 
     # ---- speculative decode tick (serve.spec) ---------------------------
 
-    def _request_draft(self, req: Request) -> List[int]:
-        """Host-side draft for one DECODE slot, clamped to the engine's
-        static depth, the request's own cap, its remaining max_new budget,
-        and greedy-only speculation (sampled requests verify depth 0)."""
+    def _draft_depth(self, req: Request) -> int:
+        """Draft depth for one DECODE slot, clamped to the engine's static
+        depth, the request's own cap, its remaining max_new budget, and
+        greedy-only speculation (sampled requests verify depth 0)."""
         depth = (self.spec_depth if req.spec_depth is None
                  else min(req.spec_depth, self.spec_depth))
         if req.temperature > 0.0:
             depth = 0
-        depth = min(depth, req.max_new_tokens - len(req.generated) - 1)
+        return min(depth, req.max_new_tokens - len(req.generated) - 1)
+
+    def _request_draft(self, req: Request) -> List[int]:
+        """Host-side draft for one DECODE slot (see `_draft_depth`)."""
+        depth = self._draft_depth(req)
         if depth <= 0:
             return []
         draft = self.drafter.draft(req, depth)
         return [int(t) for t in draft][:depth]
+
+    def _collect_drafts(self, wanting: List[Tuple[int, Request]]
+                        ) -> Dict[int, List[int]]:
+        """Drafts for every drafting DECODE slot. Drafters exposing
+        `draft_batch` (ModelDrafter) get ONE call covering all slots —
+        their per-slot catch-up/rollout steps fold into batched model
+        steps; the tokens are pinned identical to per-slot `draft` calls
+        (serve.spec.drafter). Everything else drafts per slot."""
+        batch_fn = getattr(self.drafter, "draft_batch", None)
+        if batch_fn is not None:
+            pairs = [(req, self._draft_depth(req)) for _, req in wanting]
+            by_uid = batch_fn(pairs)
+            return {s: [int(t) for t in by_uid.get(req.uid, [])][:depth]
+                    for (s, req), (_, depth) in zip(wanting, pairs)}
+        return {s: self._request_draft(req) for s, req in wanting}
 
     def _decode_tick_spec(self) -> None:
         """Speculative variant of `_decode_tick`: draft per slot, map the
@@ -777,11 +819,9 @@ class DecodeEngine:
         tables and ref-counts end bit-identical to non-speculative decode
         (DESIGN.md §spec-decode)."""
         d1 = self.spec_depth + 1
-        drafts: Dict[int, List[int]] = {}
-        for s, req in enumerate(self.slots):
-            if req is None or req.phase != DECODE:
-                continue
-            drafts[s] = self._request_draft(req)
+        wanting = [(s, req) for s, req in enumerate(self.slots)
+                   if req is not None and req.phase == DECODE]
+        drafts: Dict[int, List[int]] = self._collect_drafts(wanting)
         for s in list(drafts):
             req = self.slots[s]
             if req is None or req.phase != DECODE:

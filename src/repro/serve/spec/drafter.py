@@ -181,5 +181,96 @@ class ModelDrafter(Drafter):
         self._ctx[request.uid] = [state, len(ctx)]
         return drafts
 
+    def draft_batch(self, pairs) -> Dict[int, List[int]]:
+        """Batched form of `draft` over [(request, depth), ...] — ONE
+        batched model step per catch-up/rollout position instead of one
+        batch-1 step per slot per position. Tokens (and each slot's stored
+        draft state) are pinned identical to per-slot `draft` calls: the
+        dense serve_step is row-parallel, rows whose catch-up or rollout
+        finishes early are frozen by masking (their state stops merging,
+        exactly where the solo loop stopped stepping), and rows the solo
+        path would early-return on (depth 0 after the max_len clamp, or no
+        unsynced context) are excluded from the batch entirely — the solo
+        path mutates no state for them either."""
+        import jax
+        import jax.numpy as jnp
+        out: Dict[int, List[int]] = {}
+        rows = []                          # (uid, ctx, depth, entry)
+        for req, depth in pairs:
+            ctx = _context(req)
+            if len(ctx) + depth > self.max_len:
+                depth = max(0, self.max_len - len(ctx))
+            entry = self._ctx.get(req.uid)
+            synced = entry[1] if entry is not None else 0
+            if depth <= 0 or len(ctx) == synced:
+                out[req.uid] = []
+                continue
+            rows.append((req.uid, ctx, depth, entry))
+        if not rows:
+            return out
+
+        axes = self.model.state_batch_axes()
+        nb = len(rows)
+
+        def merge(new_state, old_state, take):
+            merged = {}
+            for key, arr in new_state.items():
+                shape = [1] * arr.ndim
+                shape[axes[key]] = nb
+                merged[key] = jnp.where(take.reshape(shape), arr,
+                                        old_state[key])
+            return merged
+
+        states = [(e[0] if e is not None
+                   else self.model.init_decode_state(1, self.max_len))
+                  for _, _, _, e in rows]
+        state = {key: jnp.concatenate([s[key] for s in states],
+                                      axis=axes[key])
+                 for key in states[0]}
+
+        # catch-up: stream each row's unsynced context suffix, frozen once
+        # its own suffix is exhausted
+        counts = np.array([len(ctx) - (e[1] if e is not None else 0)
+                           for _, ctx, _, e in rows])
+        tok = np.zeros((nb, counts.max()), np.int32)
+        for r, (_, ctx, _, e) in enumerate(rows):
+            synced = e[1] if e is not None else 0
+            tok[r, :counts[r]] = ctx[synced:]
+        cur = None
+        for i in range(tok.shape[1]):
+            logits, st2 = self._step(self.params, state,
+                                     jnp.asarray(tok[:, i]))
+            take = jnp.asarray(i < counts)
+            state = merge(st2, state, take)
+            cur = (logits if cur is None
+                   else jnp.where(take[:, None], logits, cur))
+
+        # rollout: greedy depth steps, each row frozen past its own depth
+        depths = np.array([d for _, _, d, _ in rows])
+        drafts: List[List[int]] = [[] for _ in rows]
+        for d in range(depths.max()):
+            nt = jnp.argmax(cur, axis=-1).astype(jnp.int32)
+            nt_np = np.asarray(nt)
+            for r in range(nb):
+                if d < depths[r]:
+                    drafts[r].append(int(nt_np[r]))
+            # the solo loop steps once per drafted token (the step AFTER
+            # the last draft included) — freeze rows past their own depth
+            logits, st2 = self._step(self.params, state, nt)
+            live = jnp.asarray(d < depths)
+            state = merge(st2, state, live)
+            cur = jnp.where(live[:, None], logits, cur)
+
+        for r, (uid, ctx, _, _) in enumerate(rows):
+            row_state = {
+                key: jax.lax.dynamic_slice_in_dim(arr, r, 1,
+                                                  axis=axes[key])
+                for key, arr in state.items()}
+            row_state["length"] = jnp.full_like(row_state["length"],
+                                                len(ctx))
+            self._ctx[uid] = [row_state, len(ctx)]
+            out[uid] = drafts[r]
+        return out
+
     def release(self, uid: int) -> None:
         self._ctx.pop(uid, None)

@@ -134,10 +134,75 @@ def dsa_sparse_attention(q: jnp.ndarray, kcache: jnp.ndarray, vcache: jnp.ndarra
     return out.reshape(b, h, hd)
 
 
+def distinct_pages(topk_idx: jnp.ndarray, *, page_size: int,
+                   num_logical_pages: int) -> jnp.ndarray:
+    """Per-row ascending distinct LOGICAL pages touched by the selected
+    indices, padded with the sentinel `num_logical_pages` — the descriptor
+    list a page-granular DMA engine would walk. `topk_idx` must already be
+    clipped to [0, MP·page_size). Shape (B, S), S = min(K, MP): a row of K
+    entries can never touch more than min(K, MP) distinct pages, so the
+    slot scatter below cannot overflow.
+    """
+    b, k = topk_idx.shape
+    mp = num_logical_pages
+    s = min(k, mp)
+    pg = jnp.sort(topk_idx // page_size, axis=1).astype(jnp.int32)
+    first = jnp.concatenate(
+        [jnp.ones((b, 1), bool), pg[:, 1:] > pg[:, :-1]], axis=1)
+    slot = jnp.cumsum(first.astype(jnp.int32), axis=1) - 1         # (B, K)
+    bi = jnp.broadcast_to(jnp.arange(b)[:, None], (b, k))
+    # duplicates of a page write the same value into the same slot
+    return jnp.full((b, s), mp, jnp.int32).at[bi, slot].set(pg)
+
+
+def page_gather_stats(topk_idx: jnp.ndarray, *, page_size: int,
+                      num_logical_pages: int) -> jnp.ndarray:
+    """(B,) int32 distinct-page counts for a Top-K selection — the
+    page-granular DMA descriptor count. Page-granular gather traffic is
+    `count × page_size` rows vs the token-granular K rows; the roofline
+    bench and the gather property test consume this."""
+    n = num_logical_pages * page_size
+    li = jnp.clip(topk_idx, 0, n - 1)
+    up = distinct_pages(li, page_size=page_size,
+                        num_logical_pages=num_logical_pages)
+    return jnp.sum(up < num_logical_pages, axis=1).astype(jnp.int32)
+
+
+def _gather_topk_rows_paged(pages: jnp.ndarray, table: jnp.ndarray,
+                            li: jnp.ndarray, phys: jnp.ndarray,
+                            *, granularity: str) -> jnp.ndarray:
+    """Gather the K selected (feature...) rows from a page pool.
+
+    "token" moves exactly K rows (one DMA descriptor per Top-K entry);
+    "page" moves each *distinct* page once as a whole (`page_size` rows per
+    descriptor — fewer, larger DMAs when selections cluster) and slices the
+    rows out of the page buffer. Element-identical by construction: every
+    entry reads physical row (clip(table[page], 0) · page_size + offset) in
+    both forms, including invalid entries (unmapped pages clip to page 0
+    either way), so downstream masking sees the same values bit for bit.
+    """
+    p, page_size = pages.shape[:2]
+    if granularity == "token":
+        flat = jnp.clip(phys, 0, p - 1) * page_size + li % page_size
+        return pages.reshape((p * page_size,) + pages.shape[2:])[flat]
+    mp = table.shape[1]
+    up = distinct_pages(li, page_size=page_size, num_logical_pages=mp)
+    # sentinel slot mp reads a padded -1 column → clips to page 0, but no
+    # entry's searchsorted slot ever lands on it (every entry's page is in up)
+    tpad = jnp.concatenate(
+        [table, jnp.full((table.shape[0], 1), -1, table.dtype)], axis=1)
+    uphys = jnp.take_along_axis(tpad, up, axis=1)                  # (B, S)
+    page_buf = pages[jnp.clip(uphys, 0, p - 1)]        # (B, S, page_size, ...)
+    slot = jax.vmap(jnp.searchsorted)(up, li // page_size)         # (B, K)
+    bi = jnp.arange(li.shape[0])[:, None]
+    return page_buf[bi, slot, li % page_size]
+
+
 def dsa_sparse_attention_paged(q: jnp.ndarray, k_pages: jnp.ndarray,
                                v_pages: jnp.ndarray, table: jnp.ndarray,
                                topk_idx: jnp.ndarray, lengths: jnp.ndarray,
-                               *, scale: float, rules=None) -> jnp.ndarray:
+                               *, scale: float, granularity: str = "token",
+                               rules=None) -> jnp.ndarray:
     """Block-table-native sparse attention (XLA gather form of the fused
     Pallas kernel `kernels.paged_sparse_decode_attn`).
 
@@ -148,6 +213,11 @@ def dsa_sparse_attention_paged(q: jnp.ndarray, k_pages: jnp.ndarray,
     traffic independent of the logical extent MP·page_size — and the
     contiguous logical K/V views are never materialized.
 
+    `granularity` picks the gather's DMA shape: "token" moves one row per
+    Top-K entry; "page" moves each distinct touched page whole and slices
+    rows in fast memory (`_gather_topk_rows_paged`) — coarser descriptors,
+    bit-identical output.
+
     Masking: an entry contributes iff idx ∈ [0, length) AND its page is
     mapped. For in-length indices the page is always mapped (the serving
     layer maps pages up to `length` before the step), so for identical
@@ -155,6 +225,9 @@ def dsa_sparse_attention_paged(q: jnp.ndarray, k_pages: jnp.ndarray,
     materialized logical view — same gathered values at unmasked positions,
     same NEG sentinel at masked ones, same reduction shapes/order.
     """
+    if granularity not in ("token", "page"):
+        raise ValueError(f"granularity must be 'token' or 'page', "
+                         f"got {granularity!r}")
     b, h, hd = q.shape
     p, page_size, kvh = k_pages.shape[:3]
     g = h // kvh
@@ -168,9 +241,10 @@ def dsa_sparse_attention_paged(q: jnp.ndarray, k_pages: jnp.ndarray,
     phys = jnp.take_along_axis(table, li // page_size, axis=1)     # (B, K)
     valid = ((topk_idx >= 0) & (topk_idx < lengths[:, None])
              & (phys >= 0))
-    flat = jnp.clip(phys, 0, p - 1) * page_size + li % page_size   # (B, K)
-    kg = k_pages.reshape((p * page_size,) + k_pages.shape[2:])[flat]
-    vg = v_pages.reshape((p * page_size,) + v_pages.shape[2:])[flat]
+    kg = _gather_topk_rows_paged(k_pages, table, li, phys,
+                                 granularity=granularity)
+    vg = _gather_topk_rows_paged(v_pages, table, li, phys,
+                                 granularity=granularity)
     # resharding (for TP heads) happens on the small (B,K) gathered rows,
     # never on the page pool — mirrors dsa_sparse_attention
     kg = constrain(kg, rules, "batch", None, None, None)
@@ -188,7 +262,8 @@ def dsa_sparse_attention_paged_mq(q: jnp.ndarray, k_pages: jnp.ndarray,
                                   v_pages: jnp.ndarray, table: jnp.ndarray,
                                   topk_idx: jnp.ndarray,
                                   lengths: jnp.ndarray,
-                                  *, scale: float, rules=None) -> jnp.ndarray:
+                                  *, scale: float, granularity: str = "token",
+                                  rules=None) -> jnp.ndarray:
     """Multi-query-row form of `dsa_sparse_attention_paged` — the XLA shape
     of the speculative verify tick's attention stage (the Pallas hot-spot
     form is `kernels.paged_sparse_decode_attn_mq`).
@@ -205,7 +280,8 @@ def dsa_sparse_attention_paged_mq(q: jnp.ndarray, k_pages: jnp.ndarray,
     out = dsa_sparse_attention_paged(
         q.reshape((b * qn,) + q.shape[2:]), k_pages, v_pages,
         jnp.repeat(table, qn, axis=0), topk_idx.reshape(b * qn, -1),
-        lengths.reshape(b * qn), scale=scale, rules=rules)
+        lengths.reshape(b * qn), scale=scale, granularity=granularity,
+        rules=rules)
     return out.reshape((b, qn) + out.shape[1:])
 
 
@@ -274,14 +350,17 @@ def dsa_decode_paged(q: jnp.ndarray, k_pages: jnp.ndarray,
                      max_candidates: Optional[int] = None,
                      gate_max_n: int = 200_000,
                      min_n: int = 4096,
-                     swa_window: Optional[int] = None, rules=None,
+                     swa_window: Optional[int] = None,
+                     gather_granularity: str = "token", rules=None,
                      mesh=None) -> DSAOutput:
     """Block-table-native DSA decode step: identical scoring/selection to
     `dsa_decode` (bit-exact — `idx_kcache` is the logical indexer-K view,
     the paper's irreducible O(N·d_i) read), but attention gathers its K
     rows straight from the page pools. The K/V logical views are never
     built; feedback indices stay logical, so GVR's temporal warm start is
-    untouched by the physical layout.
+    untouched by the physical layout. `gather_granularity` selects token-
+    vs page-granular DMA for the attention gather (bit-identical either
+    way — see `dsa_sparse_attention_paged`).
     """
     sel = dsa_select(indexer_params, x, idx_kcache, prev_topk, lengths,
                      k=k, heads=heads, dim=dim, rope_base=rope_base,
@@ -290,5 +369,7 @@ def dsa_decode_paged(q: jnp.ndarray, k_pages: jnp.ndarray,
                      min_n=min_n, swa_window=swa_window, rules=rules,
                      mesh=mesh)
     out = dsa_sparse_attention_paged(q, k_pages, v_pages, table, sel.indices,
-                                     lengths, scale=scale, rules=rules)
+                                     lengths, scale=scale,
+                                     granularity=gather_granularity,
+                                     rules=rules)
     return DSAOutput(out, sel.indices, sel.secant_iters, sel.gvr_rows)

@@ -50,6 +50,19 @@ SCHEMAS = {
         "engine": {"single"},
         "sharded_tokens_identical_to_single_device": None,
     },
+    "BENCH_roofline.json": {
+        "peaks": {"hbm_bytes_per_s", "peak_flops", "ici_bytes_per_s"},
+        "note": None,
+        "kernel_config": {"b", "h", "kvh", "d", "dv", "page_size", "mp", "k",
+                          "q_rows", "indexer_dim", "indexer_heads",
+                          "pages_touched"},
+        "kernels": None,                     # list of per-kernel rows
+        "verify_tick": {"arch", "rows", "asserted"},
+        "gather_granularity": {"layers", "slots", "k", "page_size",
+                               "selected_tokens", "distinct_pages",
+                               "token_granular_bytes", "page_granular_bytes",
+                               "page_over_token_ratio", "worst_case_ratio"},
+    },
     "BENCH_spec.json": {
         "config": {"arch", "k", "num_slots", "max_len", "page_size",
                    "max_new_tokens", "depths", "full"},
@@ -101,3 +114,19 @@ def test_bench_acceptance_flags_still_true():
     for depth, row in spec["gvr_hit_rate_by_draft_pos"].items():
         assert len(row) == int(depth) + 1, (depth, row)
         assert str(depth) in spec["spec"]
+    rl = json.loads((ROOT / "BENCH_roofline.json").read_text())
+    # every per-kernel row carries the distance-from-memory-bound-peak
+    # columns next to the analytic traffic
+    for row in rl["kernels"]:
+        assert {"kernel", "hbm_bytes", "dma_descriptors",
+                "tpu_memory_bound_peak_s", "cpu_wall_us",
+                "cpu_achieved_bytes_per_s",
+                "cpu_distance_from_tpu_peak"} <= set(row), row
+        assert row["hbm_bytes"] > 0
+    # the tentpole acceptance: mq verify tick no slower than scan at depth>=2
+    for row in rl["verify_tick"]["rows"]:
+        if row["spec_depth"] >= 2:
+            assert row["mq_wall_us"] <= row["scan_wall_us"], row
+    g = rl["gather_granularity"]
+    assert g["page_granular_bytes"] <= \
+        g["token_granular_bytes"] * g["page_size"]

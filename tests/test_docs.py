@@ -1,16 +1,23 @@
-"""Docs integrity: every `DESIGN.md §X` / `DESIGN §X` reference in src/
-must name a section heading that actually exists in DESIGN.md, and the
-reader-facing docs the repo advertises must exist."""
+"""Docs integrity: every `DESIGN.md §X` / `EXPERIMENTS.md §X` reference
+(with or without the `.md`) in src/ or benchmarks/ must name a section
+heading that actually exists in that doc, and the reader-facing docs the
+repo advertises must exist."""
 
 import re
 from pathlib import Path
 
+import pytest
+
 ROOT = Path(__file__).resolve().parent.parent
-REF_RE = re.compile(r"DESIGN(?:\.md)?\s*§([A-Za-z0-9][A-Za-z0-9_-]*)")
+
+DOCS = {
+    "DESIGN": "DESIGN.md",
+    "EXPERIMENTS": "EXPERIMENTS.md",
+}
 
 
-def _design_sections():
-    text = (ROOT / "DESIGN.md").read_text()
+def _sections(doc_file):
+    text = (ROOT / doc_file).read_text()
     sections = set()
     for line in text.splitlines():
         if line.lstrip().startswith("#"):
@@ -19,30 +26,38 @@ def _design_sections():
     return sections
 
 
-def _src_references():
+def _references(doc_name):
+    ref_re = re.compile(
+        doc_name + r"(?:\.md)?\s*§([A-Za-z0-9][A-Za-z0-9_-]*)")
     refs = {}
-    for path in sorted((ROOT / "src").rglob("*.py")):
-        for m in REF_RE.finditer(path.read_text()):
+    paths = sorted((ROOT / "src").rglob("*.py")) + \
+        sorted((ROOT / "benchmarks").glob("*.py")) + \
+        sorted((ROOT / "benchmarks").glob("*.sh"))
+    for path in paths:
+        for m in ref_re.finditer(path.read_text()):
             refs.setdefault(m.group(1), []).append(
                 str(path.relative_to(ROOT)))
     return refs
 
 
-def test_readme_and_design_exist():
+def test_advertised_docs_exist():
     assert (ROOT / "README.md").is_file()
-    assert (ROOT / "DESIGN.md").is_file()
+    for doc_file in DOCS.values():
+        assert (ROOT / doc_file).is_file()
 
 
-def test_design_references_resolve():
-    """A `DESIGN.md §X` citation in code is a promise; this test makes a
-    dangling one (the pre-PR-3 state of §adaptation/§Arch-applicability) a
-    test failure instead of a doc rot."""
-    sections = _design_sections()
-    assert sections, "DESIGN.md defines no §-anchored section headings"
-    refs = _src_references()
-    assert refs, "expected at least one DESIGN § reference in src/"
+@pytest.mark.parametrize("doc_name", sorted(DOCS))
+def test_doc_references_resolve(doc_name):
+    """A `<DOC>.md §X` citation in code is a promise; this test makes a
+    dangling one (the pre-PR-3 state of DESIGN's adaptation /
+    Arch-applicability sections) a test failure instead of a doc rot."""
+    doc_file = DOCS[doc_name]
+    sections = _sections(doc_file)
+    assert sections, f"{doc_file} defines no §-anchored section headings"
+    refs = _references(doc_name)
+    assert refs, f"expected at least one {doc_name} § reference in the code"
     dangling = {sec: files for sec, files in refs.items()
                 if sec not in sections}
     assert not dangling, (
-        f"DESIGN.md § references with no matching section heading: "
-        f"{dangling}; DESIGN.md defines {sorted(sections)}")
+        f"{doc_file} § references with no matching section heading: "
+        f"{dangling}; {doc_file} defines {sorted(sections)}")

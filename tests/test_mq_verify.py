@@ -1,0 +1,278 @@
+"""mq verify kernel + page-granular gather + batched drafting (PR-6 pins).
+
+The serving claims (DESIGN.md §spec-decode, §kernels):
+
+* `verify_kernel="mq"` — ONE multi-query-row forward covering all d+1
+  verify positions, per-row Top-K threaded into the next row's warm start
+  — is BIT-IDENTICAL to the `"scan"` body at engine level: tokens, the
+  (phase, method) selector log, GVR hit rate, and the accept/rollback
+  telemetry, across spec depths × page sizes × warm/cold rows.
+* `gather_granularity="page"` moves whole pages instead of single rows
+  but reads element-identical values (the slice-in-VMEM contract), never
+  more than token-granular bytes × page_size.
+* `ModelDrafter.draft_batch` (one batched call for all DECODE slots) is
+  pinned token-identical to per-slot `draft` calls.
+* The page-granular and fused-dense Pallas kernels match their pure-jnp
+  oracles (`paged_attn_ref` / `paged_dense_attn_ref`) to allclose — page
+  order reassociates the flash accumulation, so these two pin allclose
+  while the XLA serving paths above pin bitwise.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from _hypothesis_compat import given, settings, st
+from repro.configs.registry import get_config
+from repro.models.api import build_model
+from repro.serve import DecodeEngine, ModelDrafter, Request
+
+MAX_LEN = 64
+
+
+@pytest.fixture(scope="module")
+def model_and_params():
+    cfg = get_config("llama3.2-1b", smoke=True)
+    model = build_model(cfg)
+    params = model.init_params(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+def _engine(model, params, **kw):
+    kw.setdefault("num_slots", 2)
+    kw.setdefault("max_len", MAX_LEN)
+    kw.setdefault("prefill_chunk", 4)
+    kw.setdefault("kv_layout", "paged")
+    kw.setdefault("page_size", 8)
+    return DecodeEngine(model, params, **kw)
+
+
+def _reqs(cfg, seed=3):
+    """One COLD row (3-token prompt: the pre-DSA dense gate and the unseeded
+    GVR feedback dominate its early ticks) + one WARM row (long prompt: the
+    gate is already open and prev_topk seeded when decode starts)."""
+    rng = np.random.default_rng(seed)
+    return [Request(uid=0, prompt=rng.integers(1, cfg.vocab, size=3),
+                    max_new_tokens=12),
+            Request(uid=1, prompt=rng.integers(1, cfg.vocab, size=17),
+                    max_new_tokens=12)]
+
+
+def _trace(model, params, cfg, **kw):
+    eng = _engine(model, params, **kw)
+    reqs = _reqs(cfg)
+    rep = eng.run(reqs, max_ticks=2000)
+    assert rep.completed == len(reqs)
+    return (
+        {r.uid: list(r.generated) for r in reqs},
+        {r.uid: [(ph, m) for _, ph, m in eng.method_log[r.uid]] for r in reqs},
+        rep.gvr_hit_rate,
+        rep.spec_acceptance_rate,
+        rep.ticks,
+    )
+
+
+# ---------------- engine-level mq == scan bit-identity ---------------------
+
+
+@pytest.mark.parametrize("spec_depth,page_size", [(1, 8), (2, 8), (3, 4)])
+def test_mq_verify_bit_identical_to_scan(model_and_params, spec_depth,
+                                         page_size):
+    """Same tokens, same (phase, method) selector sequence, same GVR hit
+    rate, same acceptance telemetry, same tick count — the mq body changes
+    HOW the d+1 positions are computed, never WHAT any consumer observes.
+    The request mix covers warm and cold rows in the same batch (frozen
+    rows past a short row's draft budget included)."""
+    cfg, model, params = model_and_params
+    kw = dict(spec_depth=spec_depth, page_size=page_size,
+              drafter=ModelDrafter(model, params, max_len=MAX_LEN))
+    scan = _trace(model, params, cfg, verify_kernel="scan", **kw)
+    mq = _trace(model, params, cfg, verify_kernel="mq", **kw)
+    assert mq[0] == scan[0], "token streams diverged"
+    assert mq[1] == scan[1], "selector method logs diverged"
+    assert mq[2] == scan[2], "GVR hit rate diverged"
+    assert mq[3] == scan[3], "accept/rollback telemetry diverged"
+    assert mq[4] == scan[4], "tick counts diverged"
+
+
+def test_mq_verify_with_page_granular_gather(model_and_params):
+    """The two flags compose: mq verify over whole-page DMA gather is still
+    bit-identical to the scan body over token-granular gather."""
+    cfg, model, params = model_and_params
+    kw = dict(spec_depth=2, drafter=ModelDrafter(model, params,
+                                                 max_len=MAX_LEN))
+    base = _trace(model, params, cfg, verify_kernel="scan",
+                  gather_granularity="token", **kw)
+    both = _trace(model, params, cfg, verify_kernel="mq",
+                  gather_granularity="page", **kw)
+    assert both == base
+
+
+def test_engine_flag_validation(model_and_params):
+    cfg, model, params = model_and_params
+    with pytest.raises(ValueError, match="verify_kernel"):
+        _engine(model, params, verify_kernel="warp")
+    with pytest.raises(ValueError, match="gather_granularity"):
+        _engine(model, params, gather_granularity="cacheline")
+    with pytest.raises(ValueError, match="paged"):
+        _engine(model, params, kv_layout="dense", page_size=None,
+                gather_granularity="page")
+
+
+# ---------------- page-granular gather property ----------------------------
+
+
+@settings(max_examples=15, deadline=None)
+@given(data=st.data())
+def test_page_granular_gather_bytes_and_bit_identity(data):
+    """Property over random Top-K selections: (1) page-granular DMA traffic
+    never exceeds token-granular × page_size (each of the ≤ K distinct
+    pages moves once), and (2) the paged sparse attention output is
+    BIT-identical between granularities — the whole-page buffer is sliced
+    back to exactly the token-granular rows before any arithmetic."""
+    from repro.sparse.dsa import (dsa_sparse_attention_paged,
+                                  page_gather_stats)
+
+    page_size = data.draw(st.sampled_from([4, 8]), label="page_size")
+    mp = data.draw(st.integers(2, 6), label="mp")
+    k = data.draw(st.integers(1, 24), label="k")
+    seed = data.draw(st.integers(0, 10_000), label="seed")
+    rng = np.random.default_rng(seed)
+    b, h, kvh, d = 2, 4, 2, 8
+    n = mp * page_size
+    p_pages = b * mp
+
+    kp = jnp.asarray(rng.standard_normal((p_pages, page_size, kvh, d)),
+                     jnp.float32)
+    vp = jnp.asarray(rng.standard_normal((p_pages, page_size, kvh, d)),
+                     jnp.float32)
+    table = np.full((b, mp), -1, np.int32)
+    for bb in range(b):
+        m = rng.integers(1, mp + 1)
+        table[bb, :m] = rng.permutation(p_pages)[:m]
+    idx = np.where(rng.random((b, k)) < 0.2, -1,
+                   rng.integers(0, n, (b, k))).astype(np.int32)
+    # keep at least one valid, mapped entry per row (all-masked rows are
+    # NaN in both granularities — not the property under test)
+    idx[:, 0] = rng.integers(0, page_size, (b,))
+    table, idx = jnp.asarray(table), jnp.asarray(idx)
+    q = jnp.asarray(rng.standard_normal((b, h, d)), jnp.float32)
+
+    pages = np.asarray(page_gather_stats(jnp.clip(idx, 0, n - 1),
+                                         page_size=page_size,
+                                         num_logical_pages=mp))
+    row_bytes = 2 * kvh * d * 4
+    assert (pages * page_size * row_bytes
+            <= k * row_bytes * page_size).all()
+    assert (pages <= min(k, mp)).all()
+
+    lengths = jnp.full((b,), n, jnp.int32)
+    tok = dsa_sparse_attention_paged(q, kp, vp, table, idx, lengths,
+                                     scale=d ** -0.5, granularity="token")
+    pg = dsa_sparse_attention_paged(q, kp, vp, table, idx, lengths,
+                                    scale=d ** -0.5, granularity="page")
+    np.testing.assert_array_equal(np.asarray(tok), np.asarray(pg))
+
+
+# ---------------- batched drafting == per-slot drafting --------------------
+
+
+def test_draft_batch_matches_per_slot(model_and_params):
+    """`draft_batch` (one batched model call per rollout position) must
+    reproduce the per-slot `draft` loop exactly — tokens AND the stored
+    draft states (exercised implicitly: later ticks draft from the states
+    the earlier ticks left behind)."""
+    cfg, model, params = model_and_params
+
+    class SoloOnly(ModelDrafter):
+        draft_batch = None          # forces the engine's per-slot fallback
+
+    def run(drafter_cls):
+        eng = _engine(model, params, num_slots=3, spec_depth=3,
+                      drafter=drafter_cls(model, params, max_len=MAX_LEN))
+        rng = np.random.default_rng(7)
+        reqs = [Request(uid=i, prompt=rng.integers(1, cfg.vocab, size=5 + i),
+                        max_new_tokens=8 + i) for i in range(3)]
+        rep = eng.run(reqs, max_ticks=2000)
+        assert rep.completed == len(reqs)
+        return ({r.uid: list(r.generated) for r in reqs},
+                rep.spec_acceptance_rate)
+
+    solo = run(SoloOnly)
+    batched = run(ModelDrafter)
+    assert batched == solo
+
+
+# ---------------- Pallas kernel pins (pg + fused dense) --------------------
+
+
+@pytest.mark.parametrize("kvh,h", [(2, 8), (4, 4)])
+def test_paged_sparse_pg_kernel_matches_ref(kvh, h):
+    from repro.kernels.ops import (paged_sparse_decode_attn,
+                                   paged_sparse_decode_attn_pg)
+    from repro.kernels.ref import paged_attn_ref
+
+    rng = np.random.default_rng(1)
+    b, d, page_size, mp, k = 3, 16, 8, 6, 10
+    p_pages, n = 9, 6 * 8
+    q = jnp.asarray(rng.standard_normal((b, h, d)), jnp.float32)
+    kp = jnp.asarray(rng.standard_normal((p_pages, page_size, kvh, d)),
+                     jnp.float32)
+    vp = jnp.asarray(rng.standard_normal((p_pages, page_size, kvh, d)),
+                     jnp.float32)
+    table = np.full((b, mp), -1, np.int32)
+    for bb in range(b):
+        m = rng.integers(2, mp + 1)
+        table[bb, :m] = rng.choice(p_pages, size=m, replace=False)
+    idx = np.full((b, k), -1, np.int32)
+    for bb in range(b):
+        # at least one entry on a mapped page (logical page 0): an
+        # all-masked row is NaN in the ref — not the contract under test.
+        # Entries stay DISTINCT (real Top-K selections are) — a duplicate
+        # would contribute twice token-granularly but once page-granularly.
+        kk = rng.integers(1, k + 1)
+        idx[bb, 0] = rng.integers(0, page_size)
+        if kk > 1:
+            idx[bb, 1:kk] = rng.choice(
+                np.setdiff1d(np.arange(n), idx[bb, 0]), size=kk - 1,
+                replace=False)
+    table, idx = jnp.asarray(table), jnp.asarray(idx)
+
+    ref = paged_attn_ref(q, kp, vp, table, idx)
+    got = paged_sparse_decode_attn_pg(q, kp, vp, table, idx)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                               atol=1e-5, rtol=1e-5)
+    # and the token-granular kernel agrees on the same inputs
+    tok = paged_sparse_decode_attn(q, kp, vp, table, idx)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(tok),
+                               atol=1e-5, rtol=1e-5)
+
+
+@pytest.mark.parametrize("window", [None, 7])
+def test_paged_dense_kernel_matches_ref(window):
+    from repro.kernels.ops import paged_dense_decode_attn
+    from repro.kernels.ref import paged_dense_attn_ref
+
+    rng = np.random.default_rng(2)
+    b, h, kvh, d, page_size, mp = 3, 8, 2, 16, 8, 6
+    p_pages = b * mp
+    q = jnp.asarray(rng.standard_normal((b, h, d)), jnp.float32)
+    kp = jnp.asarray(rng.standard_normal((p_pages, page_size, kvh, d)),
+                     jnp.float32)
+    vp = jnp.asarray(rng.standard_normal((p_pages, page_size, kvh, d)),
+                     jnp.float32)
+    # allocator-shaped tables: mapped prefix covering [0, length)
+    lengths = rng.integers(1, mp * page_size, size=b).astype(np.int32)
+    table = np.full((b, mp), -1, np.int32)
+    free = iter(rng.permutation(p_pages))
+    for bb in range(b):
+        for j in range((lengths[bb] + page_size - 1) // page_size):
+            table[bb, j] = next(free)
+    table = jnp.asarray(table)
+    lengths = jnp.asarray(lengths)
+
+    ref = paged_dense_attn_ref(q, kp, vp, table, lengths, window=window)
+    got = paged_dense_decode_attn(q, kp, vp, table, lengths, window=window)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                               atol=1e-5, rtol=1e-5)
